@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+
+def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
+            **kwargs) -> float:
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(*args, **kwargs)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

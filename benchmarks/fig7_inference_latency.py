@@ -1,0 +1,50 @@
+"""Paper Fig. 7: inference response times under continual training for
+(a) flat/centralized FL, (b) location-based hierarchical clustering,
+(c) HFLOP (inference-load-aware) clustering.
+
+Scenario: 20 devices in 4 geographic clusters, but request load is
+*skewed by location* (one hot zone) — exactly the case where
+location-only clustering overloads one edge and spills to the cloud
+while HFLOP balances by capacity.  Paper reference values:
+flat 79.07+-15.94 ms, hier 17.72+-24.26 ms, HFLOP 9.89+-4.63 ms."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HFLOPInstance, solve_heuristic
+from repro.routing import SimConfig, compare_methods
+from benchmarks.common import emit
+
+
+def build_scenario(seed=0, n=20, m=4, hot_factor=3.0, cap_slack=1.35):
+    rng = np.random.default_rng(seed)
+    loc = np.repeat(np.arange(m), n // m)
+    c_d = np.ones((n, m))
+    c_d[np.arange(n), loc] = 0.0
+    lam = rng.uniform(2.0, 4.0, n)
+    lam[loc == 0] *= hot_factor          # hot zone
+    r = np.full(m, lam.sum() / m * cap_slack)
+    inst = HFLOPInstance(c_d, np.ones(m), lam, r, l=2)
+    return inst, loc
+
+
+def run(duration_s=240.0, seed=0):
+    inst, loc = build_scenario(seed)
+    hflop = solve_heuristic(inst)
+    cfg = SimConfig(duration_s=duration_s, seed=seed)
+    logs = compare_methods(inst, {"flat": None, "hier_location": loc,
+                                  "hflop": hflop.assign}, cfg)
+    out = {}
+    for name, log in logs.items():
+        mean, std = log.mean_latency(), log.std_latency()
+        cloud = log.tier_fractions()["cloud"]
+        emit(f"fig7_{name}", mean * 1000,
+             f"mean_ms={mean:.2f};std_ms={std:.2f};cloud_frac={cloud:.3f}")
+        out[name] = (mean, std, cloud)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("\npaper reference: flat 79.07+-15.94 | hier 17.72+-24.26 | "
+          "hflop 9.89+-4.63 (ms)")

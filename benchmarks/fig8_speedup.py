@@ -1,0 +1,46 @@
+"""Paper Fig. 8: end-to-end latency across edge/cloud compute-capacity
+asymmetry.  Cloud inference time = edge_time * (1 - speedup); (a) nominal
+request rates — speedup barely matters because network dominates;
+(b) rates x10 — edges saturate, and flat FL (direct-to-cloud) wins once
+the cloud is fast enough (paper: crossover at speedup > 14.25%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import solve_heuristic
+from repro.routing import LatencyModel, SimConfig, compare_methods
+from benchmarks.fig7_inference_latency import build_scenario
+from benchmarks.common import emit
+
+
+def run(speedups=(0.0, 0.25, 0.5, 0.75, 0.95), duration_s=120.0, seed=0,
+        base_infer_ms=8.0):
+    inst, loc = build_scenario(seed)
+    hflop = solve_heuristic(inst)
+    assigns = {"flat": None, "hier_location": loc, "hflop": hflop.assign}
+    results = {}
+    for rate_scale, tag in ((1.0, "a"), (10.0, "b")):
+        for sp in speedups:
+            lat = LatencyModel(base_infer_ms=base_infer_ms,
+                               cloud_speedup=sp)
+            cfg = SimConfig(duration_s=duration_s, seed=seed,
+                            rate_scale=rate_scale, latency=lat)
+            logs = compare_methods(inst, assigns, cfg)
+            means = {k: v.mean_latency() for k, v in logs.items()}
+            results[(tag, sp)] = means
+            emit(f"fig8{tag}_speedup{int(sp * 100)}", means["hflop"] * 1000,
+                 ";".join(f"{k}={v:.2f}ms" for k, v in means.items()))
+    # crossover detection for (b)
+    cross = None
+    for sp in speedups:
+        m = results[("b", sp)]
+        if m["flat"] < min(m["hier_location"], m["hflop"]):
+            cross = sp
+            break
+    emit("fig8b_flat_wins_above", (cross if cross is not None else -1) * 100,
+         f"crossover_speedup={cross}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""§Perf hillclimb 2 (most collective-bound pair): xlstm-125m x
+prefill_32k — the ONLY combo whose dominant roofline term is the
+collective one (66M params: per-layer FSDP all-gathers + TP all-reduces
+cost more than the compute they enable).
+
+  it0  baseline: FSDP over "data" + TP over "model"
+  it1  kill FSDP: replicate weights over "data" (132 MB/device is cheap)
+  it2  kill TP too: pure data-parallel — batch over data x model,
+       weights fully replicated; prefill has no grad sync, so the
+       collective term should approach ZERO.
+
+Validated by the HLO collective schedule of each lowering."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+import repro.launch.dryrun  # noqa: F401
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import shardings as sh
+from repro.launch.analytic import analytic_roofline
+from repro.launch.dryrun import build_programs
+from repro.launch.mesh import ICI_BW_PER_LINK, make_production_mesh
+from repro.launch.roofline import collective_stats
+
+
+def lower_with(arch: str, shape: str, overrides):
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(arch)
+    rules = sh.rules_for(cfg, mesh, overrides=overrides)
+    fn, inputs = build_programs(arch, shape, mesh, rules)
+    compiled = fn.lower(*inputs).compile()
+    return collective_stats(compiled.as_text())
+
+
+def report(arch="xlstm-125m", shape="prefill_32k", out=""):
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape]
+    ana = analytic_roofline(cfg, shp, mesh)
+    print(f"=== {arch} x {shape} on 16x16 ===")
+    print(f"analytic baseline: compute={ana.compute_s:.2e} "
+          f"collective={ana.collective_s:.2e} dominant={ana.dominant}")
+    results = {}
+    iterations = [
+        ("it0_fsdp_tp", ()),
+        ("it1_replicated_weights", (("embed", ()),)),
+        ("it2_pure_dp", (("embed", ()), ("mlp", ()), ("heads", ()),
+                         ("kv_heads", ()), ("vocab", ()),
+                         ("mlp_act", ()), ("embed_act", ()),
+                         ("heads_act", ()), ("vocab_act", ()),
+                         ("batch", ("data", "model")))),
+    ]
+    prev = None
+    for name, ov in iterations:
+        st = lower_with(arch, shape, ov)
+        coll_s = st.total_bytes / ICI_BW_PER_LINK
+        line = (f"{name:24s}: coll_bytes/dev={st.total_bytes:.3e} "
+                f"(~{coll_s:.2e}s)  ops={st.count_by_kind}")
+        if prev:
+            line += f"  [{prev / max(st.total_bytes, 1):.1f}x fewer bytes]"
+        print(line)
+        results[name] = {"bytes": st.total_bytes, "counts": st.count_by_kind,
+                         "coll_s": coll_s}
+        prev = st.total_bytes
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--shape", default="prefill_32k")
+    ap.add_argument("--out", default="results/perf_prefill_sharding.json")
+    a = ap.parse_args()
+    report(a.arch, a.shape, a.out)

@@ -1,0 +1,94 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the
+results/dryrun JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath="results/dryrun") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def dryrun_table(records, mesh="16x16") -> str:
+    lines = ["| arch | shape | compile | args/dev | act-peak/dev | fits 16G |"
+             " collective ops (AR/AG/RS/A2A/CP) |",
+             "|---|---|---|---|---|---|---|"]
+    recs = [r for r in records if r.get("mesh") == mesh]
+    recs.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])))
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - |"
+                         f" {r.get('error', '')[:40]} |")
+            continue
+        m = r["memory"]
+        c = r["roofline"]["collective_counts"]
+        ops = "/".join(str(c.get(k, 0)) for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f}s "
+            f"| {m['argument_bytes'] / 1e9:.2f} GB "
+            f"| {m.get('activation_peak_bytes_analytic', 0) / 1e9:.2f} GB "
+            f"| {'yes' if m.get('fits_hbm') else 'NO'} | {ops} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records, mesh="16x16") -> str:
+    lines = ["| arch | shape | compute | memory | collective | dominant |"
+             " MFU bound | useful/HLO* |",
+             "|---|---|---|---|---|---|---|---|"]
+    recs = [r for r in records if r.get("mesh") == mesh and r.get("ok")]
+    recs.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])))
+    for r in recs:
+        a = r["analytic"]
+        hlo = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(a['compute_s'])} "
+            f"| {fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} "
+            f"| **{a['dominant']}** | {a.get('mfu_upper_bound', 0):.2f} "
+            f"| {hlo.get('useful_flops_ratio', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def summarize(records) -> Dict:
+    ok = [r for r in records if r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms.setdefault(r["analytic"]["dominant"], []).append(
+            (r["arch"], r["shape"], r["mesh"]))
+    return {"total": len(records), "ok": len(ok), "dominant": doms}
+
+
+def main():
+    recs = load()
+    s = summarize(recs)
+    print(f"{s['ok']}/{s['total']} combos OK")
+    for k, v in s["dominant"].items():
+        print(f"  dominant={k}: {len(v)}")
+    print()
+    print(dryrun_table(recs))
+    print()
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark entry point — one section per paper table/figure, printing
+``name,us_per_call,derived`` CSV lines.
+
+Default mode is the fast sweep (minutes on this 2-core container); the
+full-scale curves are behind per-module CLIs:
+
+  python -m benchmarks.fig6_continual_fl --rounds 100    # full Fig. 6
+  python -m repro.launch.dryrun                          # 68-combo sweep
+  python -m benchmarks.roofline_report                   # tables from it
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale figure reproductions (slow)")
+    ap.add_argument("--skip-fig6", action="store_true",
+                    help="skip the training benchmark (longest section)")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+
+    print("# --- Fig. 2: HFLOP solver scaling ---", file=sys.stderr)
+    from benchmarks import fig2_solver_scaling
+    if args.full:
+        fig2_solver_scaling.run()
+    else:
+        fig2_solver_scaling.run(sizes=((10, 3), (20, 4)), seeds=2,
+                                time_limit=30.0,
+                                heur_sizes=((500, 20), (10000, 100)))
+
+    print("# --- Fig. 7: inference response times ---", file=sys.stderr)
+    from benchmarks import fig7_inference_latency
+    fig7_inference_latency.run(duration_s=240.0 if args.full else 120.0)
+
+    print("# --- Fig. 8: latency vs compute speedup ---", file=sys.stderr)
+    from benchmarks import fig8_speedup
+    fig8_speedup.run(duration_s=120.0 if args.full else 45.0)
+
+    print("# --- Fig. 9: communication-cost savings ---", file=sys.stderr)
+    from benchmarks import fig9_cost_savings
+    if args.full:
+        fig9_cost_savings.run()
+    else:
+        fig9_cost_savings.run(n=100, densities=(2, 5, 10, 20), seeds=2)
+    fig9_cost_savings.usecase_volumes()
+
+    if not args.skip_fig6:
+        print("# --- Fig. 6: continual hierarchical FL ---", file=sys.stderr)
+        from benchmarks import fig6_continual_fl
+        rounds = 40 if args.full else 6
+        fig6_continual_fl.run(rounds=rounds, max_batches=20)
+        fig6_continual_fl.run_continual_vs_static(
+            rounds=12 if args.full else 4)
+
+    print("# --- Pallas kernels (interpret mode) ---", file=sys.stderr)
+    from benchmarks import kernels_bench
+    kernels_bench.run()
+
+    print("# --- Roofline summary (from dry-run artifacts) ---",
+          file=sys.stderr)
+    try:
+        from benchmarks import roofline_report
+        recs = roofline_report.load()
+        s = roofline_report.summarize(recs)
+        from benchmarks.common import emit
+        emit("dryrun_combos_ok", s["ok"],
+             f"ok={s['ok']}/{s['total']};dominant="
+             + ";".join(f"{k}:{len(v)}" for k, v in s["dominant"].items()))
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline summary unavailable: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

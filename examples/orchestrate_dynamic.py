@@ -1,0 +1,46 @@
+"""Orchestration under environment dynamics (paper §III + §VI):
+edge-node failure and capacity changes trigger re-clustering; the
+deployment adapts while staying feasible.
+
+  PYTHONPATH=src python examples/orchestrate_dynamic.py
+"""
+import numpy as np
+
+from repro.core import is_feasible
+from repro.orchestration import LearningController, random_inventory
+
+
+def show(dep, label):
+    t = dep.topology
+    print(f"--- {label} ---")
+    print(t.describe())
+    print(f"    services: {len(dep.inference_services)} "
+          f"(aggregators on edges {dep.aggregator_nodes})")
+
+
+def main():
+    inv = random_inventory(n=30, m=6, seed=1, capacity_slack=1.6)
+    ctl = LearningController(inventory=inv, l=2)
+    dep = show(ctl.deploy(), "initial deployment") or ctl.deployment
+
+    # an edge host fails -> learning controller re-clusters
+    failed = dep.aggregator_nodes[0]
+    print(f"\n!! edge {failed} failed")
+    dep = ctl.on_node_failure(failed)
+    show(dep, "after failure re-clustering")
+    inst = ctl.inventory.to_instance(l=2)
+    assert is_feasible(inst, dep.topology.assign)
+
+    # a co-located workload halves one edge's serving capacity
+    victim = dep.aggregator_nodes[0]
+    new_cap = ctl.inventory.edges[victim].capacity_rps * 0.5
+    print(f"\n!! edge {victim} capacity drops to {new_cap:.1f} req/s")
+    dep = ctl.on_capacity_change(victim, new_cap)
+    show(dep, "after capacity re-clustering")
+    inst = ctl.inventory.to_instance(l=2)
+    assert is_feasible(inst, dep.topology.assign)
+    print(f"\nreclusterings performed: {ctl.recluster_count}")
+
+
+if __name__ == "__main__":
+    main()

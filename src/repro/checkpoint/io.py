@@ -1,0 +1,49 @@
+"""Checkpointing: flat-key npz save/restore for arbitrary pytrees.
+
+No orbax in the container; this is a self-contained sharding-oblivious
+host checkpointer (arrays are gathered to host before saving)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(jax.tree_util.keystr((k,))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    flat, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like, treedef = _flatten(like)
+    if set(data.files) != set(flat_like):
+        missing = set(flat_like) - set(data.files)
+        extra = set(data.files) - set(flat_like)
+        raise ValueError(f"checkpoint mismatch: missing={missing} "
+                         f"extra={extra}")
+    leaves_like, td = jax.tree_util.tree_flatten(like)
+    paths, _ = zip(*jax.tree_util.tree_flatten_with_path(like)[0])
+    keys = [_SEP.join(str(jax.tree_util.keystr((k,))) for k in p)
+            for p in paths]
+    new_leaves = [jax.numpy.asarray(data[k]).astype(l.dtype)
+                  for k, l in zip(keys, leaves_like)]
+    return jax.tree_util.tree_unflatten(td, new_leaves)

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: HFLOP (inference-aware hierarchical
+FL orchestration) — problem model, exact + heuristic solvers,
+communication-cost accounting, and the cluster topology object consumed
+by the FL runtime, the inference router, and the TPU mesh mapping."""
+from repro.core.hflop import (HFLOPInstance, HFLOPSolution, build_ilp,
+                              is_feasible, objective, paper_cost_instance,
+                              random_instance, violations)
+from repro.core.solvers import (local_search, solve_bnb, solve_bruteforce,
+                                solve_greedy, solve_heuristic,
+                                solve_uncapacitated)
+from repro.core.costmodel import (GRU_MODEL_BYTES, CostReport, flat_fl_cost,
+                                  hfl_cost, savings_vs_flat)
+from repro.core.topology import ClusterTopology
+
+__all__ = [
+    "HFLOPInstance", "HFLOPSolution", "build_ilp", "is_feasible",
+    "objective", "paper_cost_instance", "random_instance", "violations",
+    "local_search", "solve_bnb", "solve_bruteforce", "solve_greedy",
+    "solve_heuristic", "solve_uncapacitated", "GRU_MODEL_BYTES",
+    "CostReport", "flat_fl_cost", "hfl_cost", "savings_vs_flat",
+    "ClusterTopology",
+]

@@ -1,0 +1,268 @@
+"""HFLOP solvers.
+
+  - ``solve_bruteforce``   exact enumeration (tiny instances; test oracle)
+  - ``solve_bnb``          exact LP-relaxation branch & bound (own simplex)
+  - ``solve_greedy``       capacity-aware greedy + edge-closing pass
+  - ``local_search``       vectorized move/close/open improvement loop
+  - ``solve_heuristic``    greedy + local search (the scalable path)
+  - ``solve_uncapacitated``paper's Fig. 9 lower-bound variant
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.hflop import (HFLOPInstance, HFLOPSolution, build_ilp,
+                              is_feasible, objective)
+from repro.core.milp import solve_milp
+
+
+# ---------------------------------------------------------------------------
+# exact: brute force (oracle)
+# ---------------------------------------------------------------------------
+
+def solve_bruteforce(inst: HFLOPInstance) -> HFLOPSolution:
+    t0 = time.perf_counter()
+    n, m = inst.n, inst.m
+    if (m + 1) ** n > 5_000_000:
+        raise ValueError("instance too large for brute force")
+    best = None
+    best_cost = np.inf
+    assign = np.full(n, -1, int)
+    load = np.zeros(m)
+
+    def rec(i: int, partial_local: float):
+        nonlocal best, best_cost
+        if partial_local >= best_cost:
+            return
+        if i == n:
+            if int(np.sum(assign >= 0)) < inst.T:
+                return
+            cost = objective(inst, assign)
+            if cost < best_cost:
+                best_cost = cost
+                best = assign.copy()
+            return
+        # option: skip device (only useful if enough devices remain)
+        if (n - i - 1) + int(np.sum(assign[:i] >= 0)) >= inst.T:
+            assign[i] = -1
+            rec(i + 1, partial_local)
+        for j in range(m):
+            if load[j] + inst.lam[i] <= inst.r[j] + 1e-12:
+                assign[i] = j
+                load[j] += inst.lam[i]
+                rec(i + 1, partial_local + inst.c_d[i, j] * inst.l)
+                load[j] -= inst.lam[i]
+        assign[i] = -1
+
+    rec(0, 0.0)
+    if best is None:
+        return HFLOPSolution(np.full(n, -1), np.inf, optimal=False,
+                             solver="bruteforce",
+                             wall_time_s=time.perf_counter() - t0)
+    return HFLOPSolution(best, best_cost, optimal=True, solver="bruteforce",
+                         wall_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# greedy + local search
+# ---------------------------------------------------------------------------
+
+def _assignment_cost_components(inst, assign):
+    ok = assign >= 0
+    local = np.zeros(inst.n)
+    local[ok] = inst.c_d[np.arange(inst.n)[ok], assign[ok]] * inst.l
+    return local
+
+
+def solve_greedy(inst: HFLOPInstance) -> HFLOPSolution:
+    """Capacity-aware greedy: place hard-to-fit devices first at their
+    cheapest feasible edge (open cost amortized), then close unprofitable
+    edges, then drop surplus devices if T < n."""
+    t0 = time.perf_counter()
+    n, m = inst.n, inst.m
+    assign = np.full(n, -1, int)
+    load = np.zeros(m)
+    opened = np.zeros(m, bool)
+    order = np.argsort(-inst.lam)                      # big consumers first
+    for i in order:
+        costs = inst.c_d[i] * inst.l + np.where(opened, 0.0, inst.c_e)
+        feas = load + inst.lam[i] <= inst.r + 1e-12
+        costs = np.where(feas, costs, np.inf)
+        j = int(np.argmin(costs))
+        if np.isfinite(costs[j]):
+            assign[i] = j
+            load[j] += inst.lam[i]
+            opened[j] = True
+    # close-edge pass: move everyone off an edge if it saves cost
+    for j in np.argsort(np.bincount(assign[assign >= 0] + 0,
+                                    minlength=m))[:m]:
+        if not opened[j]:
+            continue
+        members = np.nonzero(assign == j)[0]
+        if members.size == 0:
+            opened[j] = False
+            continue
+        # cheapest feasible relocation per member (to other open edges)
+        delta = 0.0
+        moves = {}
+        load2 = load.copy()
+        ok = True
+        for i in members[np.argsort(-inst.lam[members])]:
+            costs = inst.c_d[i] * inst.l
+            feas = (load2 + inst.lam[i] <= inst.r + 1e-12) & opened
+            feas[j] = False
+            costs = np.where(feas, costs, np.inf)
+            k = int(np.argmin(costs))
+            if not np.isfinite(costs[k]):
+                ok = False
+                break
+            moves[i] = k
+            load2[k] += inst.lam[i]
+            delta += (inst.c_d[i, k] - inst.c_d[i, j]) * inst.l
+        if ok and delta < inst.c_e[j] - 1e-12:
+            for i, k in moves.items():
+                assign[i] = k
+            load = load2
+            load[j] = 0.0
+            opened[j] = False
+    # participation trimming (T < n): dropping a device always saves >= 0
+    surplus = int(np.sum(assign >= 0)) - inst.T
+    if surplus > 0:
+        local = _assignment_cost_components(inst, assign)
+        for i in np.argsort(-local):
+            if surplus <= 0 or assign[i] < 0:
+                break
+            if local[i] <= 0:
+                break
+            load[assign[i]] -= inst.lam[i]
+            assign[i] = -1
+            surplus -= 1
+    cost = objective(inst, assign) if np.sum(assign >= 0) >= inst.T else np.inf
+    return HFLOPSolution(assign, cost, optimal=False, solver="greedy",
+                         wall_time_s=time.perf_counter() - t0)
+
+
+def local_search(inst: HFLOPInstance, sol: HFLOPSolution,
+                 max_iters: int = 10_000) -> HFLOPSolution:
+    """Vectorized best-improvement: single-device relocations (with edge
+    open/close bookkeeping) until no move improves."""
+    t0 = time.perf_counter()
+    n, m = inst.n, inst.m
+    if not np.isfinite(sol.cost) or not is_feasible(inst, sol.assign):
+        return sol                      # nothing feasible to improve
+    assign = sol.assign.copy()
+    for _ in range(max_iters):
+        ok = assign >= 0
+        load = np.zeros(m)
+        np.add.at(load, assign[ok], inst.lam[ok])
+        counts = np.zeros(m, int)
+        np.add.at(counts, assign[ok], 1)
+        opened = counts > 0
+        cur_local = np.where(ok, inst.c_d[np.arange(n),
+                                          np.clip(assign, 0, m - 1)], 0.0)
+        cur_local = cur_local * inst.l * ok
+        # delta[i, j] = cost change of moving device i to edge j
+        open_cost = np.where(opened, 0.0, inst.c_e)[None, :]
+        close_save = np.where(ok & (counts[np.clip(assign, 0, m - 1)] == 1),
+                              inst.c_e[np.clip(assign, 0, m - 1)], 0.0)
+        delta = (inst.c_d * inst.l + open_cost
+                 - cur_local[:, None] - close_save[:, None])
+        feas = load[None, :] + inst.lam[:, None] <= inst.r[None, :] + 1e-12
+        same = np.zeros((n, m), bool)
+        same[np.arange(n)[ok], assign[ok]] = True
+        delta = np.where(feas & ~same, delta, np.inf)
+        i, j = np.unravel_index(np.argmin(delta), delta.shape)
+        if delta[i, j] >= -1e-12:
+            break
+        assign[i] = j
+    cost = objective(inst, assign)
+    return HFLOPSolution(assign, cost, optimal=False,
+                         solver=sol.solver + "+ls",
+                         wall_time_s=sol.wall_time_s
+                         + time.perf_counter() - t0)
+
+
+def solve_heuristic(inst: HFLOPInstance) -> HFLOPSolution:
+    return local_search(inst, solve_greedy(inst))
+
+
+# ---------------------------------------------------------------------------
+# exact: LP-relaxation branch & bound
+# ---------------------------------------------------------------------------
+
+def _round_lp(inst: HFLOPInstance, xfrac: np.ndarray) -> Optional[np.ndarray]:
+    """Rounding heuristic fed to the B&B: assign each device to its
+    largest-x edge if capacity admits (greedy by fractional mass)."""
+    n, m = inst.n, inst.m
+    xm = xfrac[:n * m].reshape(n, m)
+    assign = np.full(n, -1, int)
+    load = np.zeros(m)
+    order = np.argsort(-np.max(xm, axis=1))
+    for i in order:
+        for j in np.argsort(-xm[i]):
+            if xm[i, j] < 1e-9:
+                break
+            if load[j] + inst.lam[i] <= inst.r[j] + 1e-12:
+                assign[i] = j
+                load[j] += inst.lam[i]
+                break
+    if int(np.sum(assign >= 0)) < inst.T:
+        return None
+    v = np.zeros(n * m + m)
+    for i in range(n):
+        if assign[i] >= 0:
+            v[i * m + assign[i]] = 1.0
+    for j in np.unique(assign[assign >= 0]):
+        v[n * m + j] = 1.0
+    return v
+
+
+def solve_bnb(inst: HFLOPInstance, time_limit_s: float = 600.0,
+              max_nodes: int = 200_000) -> HFLOPSolution:
+    t0 = time.perf_counter()
+    ilp = build_ilp(inst)
+    warm = solve_heuristic(inst)
+    inc = None
+    if np.isfinite(warm.cost):
+        inc = np.zeros(ilp.c.shape[0])
+        for i in range(inst.n):
+            if warm.assign[i] >= 0:
+                inc[ilp.x_index(i, warm.assign[i])] = 1.0
+        for j in np.unique(warm.assign[warm.assign >= 0]):
+            inc[ilp.y_index(j)] = 1.0
+    prio = np.zeros(ilp.c.shape[0])
+    prio[inst.n * inst.m:] = 1.0                      # branch y first
+    res = solve_milp(ilp.c, ilp.A, ilp.b, incumbent_x=inc,
+                     branch_priority=prio,
+                     rounding=lambda xf: _round_lp(inst, xf),
+                     max_nodes=max_nodes, time_limit_s=time_limit_s)
+    if res.x is None:
+        return HFLOPSolution(np.full(inst.n, -1), np.inf, optimal=False,
+                             solver="bnb", nodes_explored=res.nodes,
+                             wall_time_s=time.perf_counter() - t0)
+    xm = res.x[:inst.n * inst.m].reshape(inst.n, inst.m)
+    assign = np.where(xm.max(axis=1) > 0.5, np.argmax(xm, axis=1), -1)
+    return HFLOPSolution(assign, objective(inst, assign),
+                         optimal=res.status == "optimal", solver="bnb",
+                         nodes_explored=res.nodes,
+                         wall_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# uncapacitated variant (paper Fig. 9 lower bound)
+# ---------------------------------------------------------------------------
+
+def solve_uncapacitated(inst: HFLOPInstance,
+                        exact: bool = False) -> HFLOPSolution:
+    """With r_j = inf the problem is classic UFL.  Greedy+LS by default;
+    ``exact=True`` routes through the B&B."""
+    un = inst.uncapacitated()
+    if exact:
+        sol = solve_bnb(un)
+    else:
+        sol = solve_heuristic(un)
+    sol.solver = "uncap-" + sol.solver
+    return sol

@@ -1,0 +1,7 @@
+from repro.data.traffic import (TrafficDataset, continual_split, generate,
+                                select_fl_sensors, windows_for_sensor)
+from repro.data.tokens import TokenStream, TokenStreamConfig
+
+__all__ = ["TrafficDataset", "continual_split", "generate",
+           "select_fl_sensors", "windows_for_sensor", "TokenStream",
+           "TokenStreamConfig"]

@@ -1,0 +1,22 @@
+from repro.fl.aggregation import cluster_fedavg, fedavg, global_fedavg
+from repro.fl.client import (ClientBatch, eval_clients, stack_clients,
+                             train_clients_locally, unstack_client)
+from repro.fl.collectives import (cluster_divergence, cluster_slice,
+                                  flat_allreduce, global_sync,
+                                  hierarchical_allreduce,
+                                  stack_for_clusters)
+from repro.fl.compression import (EFState, compressed_global_sync,
+                                  dequantize_int8, init_ef_state,
+                                  quantize_int8, sync_bytes)
+from repro.fl.hierarchy import (ContinualHFL, HFLResult, HFLRunConfig,
+                                continuous_vs_static)
+
+__all__ = [
+    "cluster_fedavg", "fedavg", "global_fedavg", "ClientBatch",
+    "eval_clients", "stack_clients", "train_clients_locally",
+    "unstack_client", "cluster_divergence", "cluster_slice",
+    "flat_allreduce", "global_sync", "hierarchical_allreduce",
+    "stack_for_clusters", "EFState", "compressed_global_sync",
+    "dequantize_int8", "init_ef_state", "quantize_int8", "sync_bytes",
+    "ContinualHFL", "HFLResult", "HFLRunConfig", "continuous_vs_static",
+]

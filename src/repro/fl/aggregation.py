@@ -1,0 +1,80 @@
+"""FedAvg and hierarchical aggregation over stacked client parameters.
+
+Clients are stacked on a leading axis; cluster-local aggregation is a
+segment-mean over that axis (the host-level mirror of the TPU psum over
+the "data" mesh axis), and global aggregation averages cluster models
+(mirror of the psum over the "pod" axis)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def fedavg(stacked: PyTree, weights: Optional[jax.Array] = None) -> PyTree:
+    """Weighted average over the leading (client) axis."""
+    if weights is None:
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    w = weights / jnp.sum(weights)
+
+    def avg(x):
+        wshape = (w.shape[0],) + (1,) * (x.ndim - 1)
+        return jnp.sum(x * w.reshape(wshape).astype(x.dtype), axis=0)
+
+    return jax.tree.map(avg, stacked)
+
+
+def cluster_fedavg(stacked: PyTree, cluster_ids: np.ndarray,
+                   weights: Optional[np.ndarray] = None) -> PyTree:
+    """Per-cluster FedAvg (local aggregation round).
+
+    Returns stacked params where client i's slot holds its *cluster
+    model* — exactly what each aggregator redistributes to its members."""
+    cluster_ids = np.asarray(cluster_ids)
+    C = cluster_ids.shape[0]
+    w = np.ones(C) if weights is None else np.asarray(weights, float)
+    seg = jnp.asarray(cluster_ids)
+    n_seg = int(cluster_ids.max()) + 1
+    wj = jnp.asarray(w)
+    denom = jax.ops.segment_sum(wj, seg, n_seg)
+
+    def agg(x):
+        xw = x * wj.reshape((C,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        sums = jax.ops.segment_sum(xw, seg, n_seg)
+        means = sums / denom.reshape((n_seg,) + (1,) * (x.ndim - 1)
+                                     ).astype(x.dtype)
+        return means[seg]
+
+    return jax.tree.map(agg, stacked)
+
+
+def global_fedavg(stacked: PyTree, cluster_ids: np.ndarray,
+                  weights: Optional[np.ndarray] = None) -> PyTree:
+    """Global aggregation round: average the *cluster* models (one vote
+    per cluster, weighted by cluster data size), then broadcast back to
+    every client slot."""
+    cluster_ids = np.asarray(cluster_ids)
+    C = cluster_ids.shape[0]
+    w = np.ones(C) if weights is None else np.asarray(weights, float)
+    # cluster model = weighted mean of members; global = weighted mean of
+    # cluster models by total member weight
+    local = cluster_fedavg(stacked, cluster_ids, w)
+    seg = jnp.asarray(cluster_ids)
+    n_seg = int(cluster_ids.max()) + 1
+    wj = jnp.asarray(w)
+    cw = jax.ops.segment_sum(wj, seg, n_seg)          # cluster weights
+
+    def agg(x):
+        # one representative row per cluster
+        first = jnp.zeros((n_seg,) + x.shape[1:], x.dtype)
+        first = first.at[seg].set(x)                  # last member wins; all equal
+        gw = cw / jnp.sum(cw)
+        glob = jnp.sum(first * gw.reshape((n_seg,) + (1,) * (x.ndim - 1)
+                                          ).astype(x.dtype), axis=0)
+        return jnp.broadcast_to(glob, x.shape)
+
+    return jax.tree.map(agg, local)

@@ -1,0 +1,148 @@
+"""TPU-native hierarchical aggregation (DESIGN.md §3 mapping).
+
+On the production mesh, an FL *cluster* is a pod (multi-pod mesh) or a
+"cluster" sub-axis of the single-pod mesh.  Cluster-local model replicas
+are expressed as a leading ``cluster`` dimension on every parameter,
+sharded over that mesh axis; local training is ``vmap``-ed over it so XLA
+emits NO cross-cluster collectives for local rounds.  The global
+aggregation round is a mean over the leading dim — one all-reduce over
+the expensive ("pod") axis, paid only every ``l`` rounds, exactly the
+paper's cost amortization.
+
+``hierarchical_allreduce`` additionally exposes the raw shard_map/psum
+formulation used by the roofline benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def stack_for_clusters(params: PyTree, n_clusters: int) -> PyTree:
+    """Replicate params with a leading cluster dim (divergent replicas)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clusters,) + x.shape), params)
+
+
+def cluster_slice(stacked: PyTree, k: int) -> PyTree:
+    return jax.tree.map(lambda x: x[k], stacked)
+
+
+def global_sync(stacked: PyTree,
+                weights: Optional[jax.Array] = None) -> PyTree:
+    """Global aggregation round: weighted mean over the cluster dim,
+    broadcast back.  Under jit on the multi-pod mesh this lowers to ONE
+    all-reduce over the "pod" axis per tensor."""
+    def sync(x):
+        if weights is None:
+            m = jnp.mean(x.astype(jnp.float32), axis=0)
+        else:
+            w = (weights / jnp.sum(weights)).astype(jnp.float32)
+            m = jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0))
+        return jnp.broadcast_to(m.astype(x.dtype)[None], x.shape)
+
+    return jax.tree.map(sync, stacked)
+
+
+def cluster_divergence(stacked: PyTree) -> jax.Array:
+    """Max abs deviation of any cluster replica from the mean — a
+    monitoring metric for how far clusters drifted between global rounds."""
+    def dev(x):
+        m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.max(jnp.abs(x.astype(jnp.float32) - m))
+
+    leaves = [dev(x) for x in jax.tree.leaves(stacked)]
+    return jnp.max(jnp.stack(leaves))
+
+
+def global_sync_shardmap(stacked: PyTree, mesh, axis: str = "cluster"
+                         ) -> PyTree:
+    """global_sync with the cluster axis under *manual* partitioning
+    (shard_map).  GSPMD under vmap may insert cross-cluster weight
+    all-gathers (measured on the 2x16x16 mesh — see EXPERIMENTS.md §Perf
+    exp. 3 iteration 1); manual mode makes cluster locality structural:
+    the ONLY cross-cluster traffic is this psum."""
+    n = mesh.shape[axis]
+
+    def body(local):                     # leaves: (1, ...) local slices
+        def one(x):
+            s = jax.lax.psum(x.astype(jnp.float32), axis) / n
+            return s.astype(x.dtype)
+        return jax.tree.map(one, local)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis), axis_names={axis},
+                         check_vma=False)(stacked)
+
+
+def make_hfl_local_step_shardmap(base_step, mesh, axis: str = "cluster"):
+    """Wrap a (params, opt, batch) -> (params, opt, loss) step so each
+    cluster runs it on its own replica with NO cross-cluster collectives
+    (manual shard_map over the cluster axis; data/model stay auto)."""
+    def stepped(stacked_params, stacked_opt, stacked_batch):
+        def body(p, o, b):
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            ex = lambda t: jax.tree.map(lambda x: x[None], t)
+            np_, no_, loss = base_step(sq(p), sq(o), sq(b))
+            return ex(np_), ex(no_), loss[None]
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis)),
+            axis_names={axis}, check_vma=False,
+        )(stacked_params, stacked_opt, stacked_batch)
+
+    return stepped
+
+
+# ---------------------------------------------------------------------------
+# raw shard_map formulation (roofline benchmarks, README examples)
+# ---------------------------------------------------------------------------
+
+def hierarchical_allreduce(x: jax.Array, mesh,
+                           local_axis: str = "data",
+                           global_axis: Optional[str] = "pod",
+                           do_global: bool = True) -> jax.Array:
+    """Mean-reduce ``x`` first over the cheap intra-pod axis, then
+    (optionally) over the expensive cross-pod axis.  x must be sharded
+    (local_axis?, ...) ; returns the reduced value replicated over the
+    reduced axes."""
+    axes = (local_axis,) + ((global_axis,) if (global_axis and do_global)
+                            else ())
+
+    def body(xs):
+        total = jax.lax.psum(xs, local_axis)
+        size = mesh.shape[local_axis]
+        if global_axis and do_global:
+            total = jax.lax.psum(total, global_axis)
+            size *= mesh.shape[global_axis]
+        return total / size
+
+    in_spec = P(axes)          # dim 0 co-sharded over every reduce axis
+    return jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                         out_specs=P())(x)
+
+
+def flat_allreduce(x: jax.Array, mesh) -> jax.Array:
+    """The centralized-FL baseline: one flat reduction over every
+    aggregation axis at once."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def body(xs):
+        total = xs
+        for a in axes:
+            total = jax.lax.psum(total, a)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return total / size
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(P(axes),),
+                         out_specs=P())(x)

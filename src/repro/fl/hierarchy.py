@@ -1,0 +1,170 @@
+"""Continual hierarchical FL runner — reproduces the paper's §V-B2
+experiments (Fig. 6): 20 clients, 4 clusters, 5 local epochs per round,
+2 local aggregations per global aggregation, sliding continual-learning
+window; per-client validation MSE recorded right after the client
+receives the (cluster/global) model."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.topology import ClusterTopology
+from repro.data.traffic import (TrafficDataset, continual_split,
+                                windows_for_sensor)
+from repro.fl.aggregation import cluster_fedavg, fedavg, global_fedavg
+from repro.fl.client import (ClientBatch, eval_clients, stack_clients,
+                             train_clients_locally)
+from repro.models import gru
+
+
+@dataclass
+class HFLRunConfig:
+    rounds: int = 100
+    local_epochs: int = 5
+    batch_size: int = 16
+    lr: float = 1e-4
+    history: int = 12
+    train_days: int = 21
+    val_days: int = 7
+    shift_steps: int = 36
+    max_batches: int = 40            # subsample batches/epoch for speed
+    max_val_windows: int = 512
+    seed: int = 0
+
+
+@dataclass
+class HFLResult:
+    mse: np.ndarray                  # (rounds, clients) val MSE per round
+    train_loss: np.ndarray           # (rounds, clients)
+    mode: str
+
+    def converged_round(self, tol: float = 1.05) -> int:
+        """First round whose mean MSE is within tol x of the min."""
+        means = self.mse.mean(axis=1)
+        target = means.min() * tol
+        idx = np.nonzero(means <= target)[0]
+        return int(idx[0]) if idx.size else len(means) - 1
+
+
+class ContinualHFL:
+    """mode: 'flat' (centralized FedAvg every round),
+             'hier' (cluster aggregation each round, global every l)."""
+
+    def __init__(self, cfg: ArchConfig, ds: TrafficDataset,
+                 sensors: np.ndarray, topo: ClusterTopology,
+                 run: HFLRunConfig, mode: str = "hier"):
+        assert mode in ("flat", "hier")
+        self.cfg, self.ds, self.run, self.mode = cfg, ds, run, mode
+        self.sensors = np.asarray(sensors)
+        self.topo = topo
+        # cluster ids compacted to 0..k-1 for segment ops
+        assign = topo.assign[:len(self.sensors)] \
+            if topo.assign.shape[0] >= len(self.sensors) else topo.assign
+        uniq = {int(j): k for k, j in enumerate(np.unique(assign))}
+        self.cluster_ids = np.asarray([uniq[int(j)] for j in assign])
+        rng = jax.random.key(run.seed)
+        params0, _ = gru.init_params(rng, cfg.model)
+        self.params = stack_clients([params0] * len(self.sensors))
+        self.weights = np.ones(len(self.sensors))
+
+    def _round_data(self, round_idx: int):
+        r = self.run
+        tr, va = continual_split(self.ds, round_idx, r.train_days,
+                                 r.val_days, r.shift_steps)
+        Xs, ys, Xv, yv = [], [], [], []
+        for s in self.sensors:
+            X, y = windows_for_sensor(self.ds, int(s), tr.start, tr.stop,
+                                      r.history)
+            Xs.append(X)
+            ys.append(y)
+            X2, y2 = windows_for_sensor(self.ds, int(s), va.start, va.stop,
+                                        r.history)
+            Xv.append(X2[:r.max_val_windows])
+            yv.append(y2[:r.max_val_windows])
+        train = ClientBatch(X=jnp.asarray(np.stack(Xs)),
+                            y=jnp.asarray(np.stack(ys)))
+        val = ClientBatch(X=jnp.asarray(np.stack(Xv)),
+                          y=jnp.asarray(np.stack(yv)))
+        return train, val
+
+    def run_rounds(self, rounds: Optional[int] = None,
+                   progress: bool = False) -> HFLResult:
+        r = self.run
+        rounds = rounds or r.rounds
+        mse_hist, loss_hist = [], []
+        rng = jax.random.key(r.seed + 1)
+        for t in range(rounds):
+            train, val = self._round_data(t)
+            rng, sub = jax.random.split(rng)
+            self.params, losses = train_clients_locally(
+                self.params, train, sub, cfg=self.cfg,
+                epochs=r.local_epochs, batch_size=r.batch_size, lr=r.lr,
+                max_batches=r.max_batches)
+            if self.mode == "flat":
+                glob = fedavg(self.params, jnp.asarray(self.weights))
+                self.params = jax.tree.map(
+                    lambda g: jnp.broadcast_to(g, (len(self.sensors),)
+                                               + g.shape), glob)
+            else:
+                if (t + 1) % self.topo.l == 0:      # global round
+                    self.params = global_fedavg(self.params,
+                                                self.cluster_ids,
+                                                self.weights)
+                else:                                # local round
+                    self.params = cluster_fedavg(self.params,
+                                                 self.cluster_ids,
+                                                 self.weights)
+            val_mse = eval_clients(self.params, val, cfg=self.cfg)
+            mse_hist.append(np.asarray(val_mse))
+            loss_hist.append(np.asarray(losses))
+            if progress and (t % 10 == 0 or t == rounds - 1):
+                print(f"  round {t:3d}: mean val MSE "
+                      f"{float(np.mean(val_mse)):.5f}")
+        return HFLResult(mse=np.stack(mse_hist),
+                         train_loss=np.stack(loss_hist), mode=self.mode)
+
+
+def continuous_vs_static(cfg: ArchConfig, ds: TrafficDataset, sensor: int,
+                         run: HFLRunConfig, rounds: int = 20
+                         ) -> Dict[str, float]:
+    """Paper §V-B1: a single continuously-retrained model vs a one-shot
+    model, evaluated on the final validation week."""
+    rng = jax.random.key(run.seed)
+    params0, _ = gru.init_params(rng, cfg.model)
+    stacked = stack_clients([params0])
+
+    def data(round_idx):
+        tr, va = continual_split(ds, round_idx, run.train_days,
+                                 run.val_days, run.shift_steps)
+        X, y = windows_for_sensor(ds, sensor, tr.start, tr.stop, run.history)
+        Xv, yv = windows_for_sensor(ds, sensor, va.start, va.stop,
+                                    run.history)
+        return (ClientBatch(jnp.asarray(X[None]), jnp.asarray(y[None])),
+                ClientBatch(jnp.asarray(Xv[None][:, :run.max_val_windows]),
+                            jnp.asarray(yv[None][:, :run.max_val_windows])))
+
+    # static: train once on round-0 window
+    tr0, _ = data(0)
+    static = stacked
+    for _ in range(4):               # a few extra passes, like 20 epochs
+        static, _ = train_clients_locally(
+            static, tr0, rng, cfg=cfg, epochs=run.local_epochs,
+            batch_size=run.batch_size, lr=run.lr,
+            max_batches=run.max_batches)
+    # continual: retrain on each shifted window
+    cont = stacked
+    for t in range(rounds):
+        trt, _ = data(t)
+        cont, _ = train_clients_locally(
+            cont, trt, rng, cfg=cfg, epochs=run.local_epochs,
+            batch_size=run.batch_size, lr=run.lr,
+            max_batches=run.max_batches)
+    _, va_last = data(rounds - 1)
+    mse_static = float(eval_clients(static, va_last, cfg=cfg)[0])
+    mse_cont = float(eval_clients(cont, va_last, cfg=cfg)[0])
+    return {"static_mse": mse_static, "continual_mse": mse_cont}

@@ -1,0 +1,89 @@
+"""Flash-decode Pallas kernel: ONE query token against a blocked KV cache
+with online softmax over key blocks — the hot loop of ``decode_32k`` /
+``long_500k`` serving.
+
+Grid: (batch, kv_head, C/bk).  The query's G=H/Hkv grouped heads are kept
+together in VMEM so each cache block is read once per kv_head (GQA makes
+decode memory-bound; minimizing cache reads is the whole game)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, bk: int, scale: float):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bk, Dv)
+    ok = valid_ref[0]                                 # (bk,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[None, :], s, NEG_INF)            # (G, bk)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ic == nc - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, *, bk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q (B,H,D); k/v (B,C,Hkv,D); valid (B,C) bool -> (B,H,Dv)."""
+    B, H, D = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    bk = min(bk, C)
+    assert C % bk == 0
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, C // bk)
+    kernel = functools.partial(_decode_kernel, bk=bk,
+                               scale=1.0 / math.sqrt(D))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dv), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid)
+    return out.reshape(B, H, Dv)

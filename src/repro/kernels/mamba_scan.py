@@ -1,0 +1,106 @@
+"""Mamba2 SSD chunk Pallas kernel (zamba2's compute hot spot).
+
+One grid step processes one (batch, head-block) pair and loops over the
+sequence chunks *sequentially inside the kernel*, carrying the (N x P)
+SSD state in VMEM — the TPU-native shape of the recurrence: intra-chunk
+work is two MXU matmuls (C.B^T decay-masked, then score @ u), the
+inter-chunk state update is a rank-N outer-product accumulation.
+
+Layout: heads are tiled by ``bh``; B/C are per-group (ngroups=1 for the
+assigned configs) and broadcast across the head tile."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
+                s_ref, *, nchunks: int, Q: int, bh: int, N: int, P: int):
+    s_ref[...] = jnp.zeros_like(s_ref)
+
+    def chunk(ci, _):
+        x = x_ref[0, ci].astype(jnp.float32)          # (Q, bh, P)
+        dt = dt_ref[0, ci].astype(jnp.float32)        # (Q, bh)
+        A = a_ref[...].astype(jnp.float32)            # (bh,)
+        Bm = b_ref[0, ci].astype(jnp.float32)         # (Q, N)
+        Cm = c_ref[0, ci].astype(jnp.float32)         # (Q, N)
+
+        la = dt * A[None, :]                          # (Q, bh) log decay
+        cum = jnp.cumsum(la, axis=0)
+        u = x * dt[..., None]                         # (Q, bh, P)
+
+        # intra-chunk: scores (Q,Q) per head tile, decay-masked
+        diff = cum[:, None, :] - cum[None, :, :]      # (Qi, Qj, bh)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        tri = (ii >= jj)[..., None]
+        decay = jnp.where(tri, jnp.exp(diff), 0.0)    # (Q,Q,bh)
+        cb = jnp.dot(Cm, Bm.T,
+                     preferred_element_type=jnp.float32)  # (Qi,Qj)
+        scores = cb[..., None] * decay                # (Q,Q,bh)
+        y_intra = jnp.einsum("ijh,jhp->ihp", scores, u)
+
+        # inter-chunk: contribution of the carried state
+        w_in = jnp.exp(cum)                           # (Q,bh)
+        s_prev = s_ref[...]                           # (bh,N,P)
+        y_inter = jnp.einsum("qn,hnp,qh->qhp", Cm, s_prev, w_in)
+
+        y_ref[0, ci] = (y_intra + y_inter).astype(y_ref.dtype)
+
+        # state update: S = a_chunk * S_prev + sum_j wlast_j B_j (x) u_j
+        wlast = jnp.exp(cum[-1:, :] - cum)            # (Q,bh)
+        s_loc = jnp.einsum("qn,qhp,qh->hnp", Bm, u, wlast)
+        a_chunk = jnp.exp(cum[-1, :])                 # (bh,)
+        s_ref[...] = a_chunk[:, None, None] * s_prev + s_loc
+        return 0
+
+    jax.lax.fori_loop(0, nchunks, chunk, 0)
+    s_final_ref[0] = s_ref[...].astype(s_final_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bh", "interpret"))
+def mamba_chunk_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+                     Bm: jax.Array, Cm: jax.Array, *, chunk: int = 64,
+                     bh: int = 0, interpret: bool = True):
+    """x (B,L,H,P); dt (B,L,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,L,N) (ngroups=1).  Returns (y (B,L,H,P), state (B,H,N,P))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0
+    nchunks = L // chunk
+    bh = bh or H
+    assert H % bh == 0
+    xr = x.reshape(B, nchunks, chunk, H, P)
+    dtr = dt.reshape(B, nchunks, chunk, H)
+    Br = Bm.reshape(B, nchunks, chunk, N)
+    Cr = Cm.reshape(B, nchunks, chunk, N)
+    kernel = functools.partial(_ssd_kernel, nchunks=nchunks, Q=chunk,
+                               bh=bh, N=N, P=P)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(B, H // bh),
+        in_specs=[
+            pl.BlockSpec((1, nchunks, chunk, bh, P),
+                         lambda b, h: (b, 0, 0, h, 0)),
+            pl.BlockSpec((1, nchunks, chunk, bh), lambda b, h: (b, 0, 0, h)),
+            pl.BlockSpec((bh,), lambda b, h: (h,)),
+            pl.BlockSpec((1, nchunks, chunk, N), lambda b, h: (b, 0, 0, 0)),
+            pl.BlockSpec((1, nchunks, chunk, N), lambda b, h: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nchunks, chunk, bh, P),
+                         lambda b, h: (b, 0, 0, h, 0)),
+            pl.BlockSpec((1, bh, N, P), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nchunks, chunk, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A, Br, Cr)
+    return y.reshape(B, L, H, P), s

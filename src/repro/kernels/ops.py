@@ -1,0 +1,15 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret
+mode executes the kernel bodies in Python for correctness validation).
+On real TPU hardware pass ``interpret=False`` — same BlockSpecs, same
+code."""
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fedavg_reduce import fedavg_reduce
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gru_cell import gru_seq
+from repro.kernels.mamba_scan import mamba_chunk_scan
+from repro.kernels.topk_router import topk_router
+
+__all__ = ["decode_attention", "fedavg_reduce", "flash_attention",
+           "gru_seq", "mamba_chunk_scan", "topk_router"]

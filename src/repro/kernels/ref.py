@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q/k/v (BH, T, D) -> (BH, T, Dv)."""
+    T = q.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    d = jnp.arange(T)[:, None] - jnp.arange(T)[None, :]
+    mask = jnp.ones((T, T), bool)
+    if causal:
+        mask &= d >= 0
+    if window > 0:
+        mask &= d < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q (B,H,D); k/v (B,C,Hkv,D); valid (B,C) -> (B,H,Dv)."""
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
+def gru_seq_ref(xw, h0, w_h):
+    """Fused-gate GRU over time: xw (B,T,3h) = x@w_x+b precomputed;
+    h0 (B,h); w_h (h,3h).  Returns (B,T,h)."""
+    def step(h, xt):
+        hw = h @ w_h
+        xr, xz, xn = jnp.split(xt, 3, axis=-1)
+        hr, hz, hn = jnp.split(hw, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        h2 = (1 - z) * n + z * h
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, h0, xw.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def mamba_chunk_ref(x, dt, A, Bm, Cm, chunk):
+    """Delegates to the model's SSD implementation (the oracle *is* the
+    XLA path used by the models)."""
+    from repro.models.ssm import ssd_chunked
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y, state
+
+
+def fedavg_reduce_ref(stacked, weights):
+    """stacked (C, N); weights (C,) -> (N,) weighted average."""
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("c,cn->n", w.astype(jnp.float32),
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def topk_router_ref(logits, k: int) -> Tuple[jax.Array, jax.Array]:
+    """logits (T,E) -> (weights (T,k), idx (T,k)) from softmax probs."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, i = jax.lax.top_k(probs, k)
+    return w, i.astype(jnp.int32)

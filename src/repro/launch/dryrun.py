@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape) on the production meshes with 512 placeholder host devices, then
+record memory_analysis / cost_analysis / collective schedule for the
+roofline report (EXPERIMENTS.md §Dry-run / §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch llama3-405b --shape train_4k --mesh single,multi
+
+Results are cached as JSON under --out (default results/dryrun); reruns
+skip cached combos unless --force.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, applicable_shapes, get_config
+from repro.configs.registry import ASSIGNED
+from repro.launch import shardings as sh
+from repro.launch.analytic import activation_peak_bytes, analytic_roofline
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.launch.roofline import analyze, model_flops_for
+from repro.launch.specs import (cache_specs, decode_token_specs,
+                                model_batch_specs, param_specs_and_axes)
+from repro.models import make_model
+from repro.models.common import logical_sharding
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+def _replicated(mesh):
+    return sh.replicated(mesh)
+
+
+def build_programs(arch: str, shape_name: str, mesh, rules,
+                   mode_override: Optional[str] = None):
+    """Returns (jitted fn, example inputs tuple) for the combo."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mode = mode_override or shape.mode
+    api = make_model(cfg)
+    p_struct, axes = param_specs_and_axes(api)
+    p_sh = sh.params_shardings(axes, p_struct, mesh, rules)
+
+    if mode == "train":
+        opt = AdamW(lr=cfg.run.learning_rate,
+                    state_dtype=cfg.run.opt_state_dtype)
+        opt_struct = jax.eval_shape(opt.init, p_struct)
+        opt_sh = type(opt_struct)(step=_replicated(mesh), m=p_sh, v=p_sh)
+        batch = model_batch_specs(cfg, shape, with_labels=True)
+        b_sh = sh.batch_shardings(batch, mesh, rules)
+        step = make_train_step(api, cfg, opt)
+
+        def wrapped(params, opt_state, b):
+            with logical_sharding(mesh, rules):
+                return step(params, opt_state, b)
+
+        fn = jax.jit(wrapped,
+                     in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, _replicated(mesh)),
+                     donate_argnums=(0, 1))
+        return fn, (p_struct, opt_struct, batch)
+
+    if mode == "prefill":
+        batch = model_batch_specs(cfg, shape, with_labels=False)
+        b_sh = sh.batch_shardings(batch, mesh, rules)
+
+        def prefill(params, b):
+            with logical_sharding(mesh, rules):
+                logits, _ = api.forward(params, b)
+                return logits
+
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        return fn, (p_struct, batch)
+
+    # decode
+    cache_struct = cache_specs(api, shape.global_batch, shape.seq_len)
+    c_sh = sh.cache_shardings(cache_struct, mesh, rules)
+    tok, pos = decode_token_specs(cfg, shape)
+    t_sh = sh.batch_shardings({"tokens": tok}, mesh, rules)["tokens"]
+
+    def decode(params, tokens, p, cache):
+        with logical_sharding(mesh, rules):
+            return api.decode_step(params, tokens, p, cache)
+
+    fn = jax.jit(decode, in_shardings=(p_sh, t_sh, _replicated(mesh), c_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(3,))
+    return fn, (p_struct, tok, pos, cache_struct)
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              rules_overrides=()) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    rules = sh.rules_for(cfg, mesh, overrides=rules_overrides
+                         or cfg.run.sharding_overrides)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(mesh.devices.size),
+    }
+    t0 = time.perf_counter()
+    fn, inputs = build_programs(arch, shape_name, mesh, rules)
+    lowered = fn.lower(*inputs)
+    rec["lower_s"] = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.perf_counter() - t1
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or
+                              getattr(ma, "temp_size_in_bytes", 0)),
+        }
+        # Per-device live footprint: resident arguments (params/opt/cache;
+        # outputs alias them via donate_argnums) + analytic activation
+        # high-water mark.  XLA-CPU's temp_size is arena-total without
+        # liveness and its peak metric mirrors argument size, so the
+        # activation transient is estimated analytically (analytic.py).
+        args_b = rec["memory"]["argument_bytes"]
+        act_b = activation_peak_bytes(get_config(arch),
+                                      INPUT_SHAPES[shape_name], mesh)
+        rec["memory"]["activation_peak_bytes_analytic"] = act_b
+        live = args_b + act_b
+        rec["memory"]["fits_hbm"] = bool(live <= HBM_BYTES)
+        rec["memory"]["hbm_fraction"] = live / HBM_BYTES
+    except Exception as e:  # noqa: BLE001
+        rec["memory"] = {"error": repr(e)}
+    shape = INPUT_SHAPES[shape_name]
+    roof = analyze(compiled, mesh, model_flops_for(cfg, shape),
+                   multi_pod=multi_pod)
+    rec["roofline"] = roof.as_dict()
+    ana = analytic_roofline(cfg, shape, mesh)
+    rec["analytic"] = ana.as_dict()
+    rec["analytic"]["mfu_upper_bound"] = ana.mfu(
+        model_flops_for(cfg, shape) / mesh.devices.size)
+    rec["ok"] = True
+    return rec
+
+
+def combos(arch_filter=None, shape_filter=None):
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            if arch_filter and arch not in arch_filter:
+                continue
+            if shape_filter and shape.name not in shape_filter:
+                continue
+            yield arch, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="", help="comma-separated filter")
+    ap.add_argument("--shape", default="", help="comma-separated filter")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    arch_f = set(args.arch.split(",")) if args.arch else None
+    shape_f = set(args.shape.split(",")) if args.shape else None
+    meshes = args.mesh.split(",")
+
+    results = []
+    for arch, shape in combos(arch_f, shape_f):
+        for mesh_kind in meshes:
+            multi = mesh_kind == "multi"
+            tag = f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    results.append(json.load(f))
+                print(f"[cached] {tag}")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            try:
+                rec = run_combo(arch, shape, multi)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi else "16x16",
+                       "ok": False, "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(traceback.format_exc())
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            results.append(rec)
+            status = "OK" if rec.get("ok") else "FAIL"
+            r = rec.get("roofline", {})
+            print(f"  {status} compile={rec.get('compile_s', 0):.1f}s "
+                  f"dominant={r.get('dominant', '?')} "
+                  f"compute={r.get('compute_s', 0):.2e}s "
+                  f"coll={r.get('collective_s', 0):.2e}s")
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{ok}/{len(results)} combos lowered+compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = per-device collective operand bytes / link_bw
+               (pod-axis traffic is charged at DCI bandwidth)
+
+``cost_analysis()`` of an SPMD-partitioned module reports the per-device
+program, so all three terms are per-chip seconds directly comparable to
+one another — the dominant term approximates step wall time."""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import (DCI_BW, HBM_BW, ICI_BW_PER_LINK,
+                               PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_IOTA_SIMPLE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _first_group_ids(line: str):
+    """Reconstruct the device ids of the first replica group (iota or
+    explicit-list format).  Returns (ids, group_size) or (None, 1)."""
+    import numpy as np
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        G, N = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(G, N)
+        return groups, N
+    m2 = _IOTA_SIMPLE_RE.search(line)
+    if m2:
+        G, N = int(m2.group(1)), int(m2.group(2))
+        return np.arange(N)[None, :], N
+    m3 = _LIST_GROUPS_RE.search(line)
+    if m3:
+        ids = np.asarray([int(x) for x in m3.group(1).split(",") if x])
+        return ids[None, :], ids.size
+    return None, 1
+
+
+def _crosses_pod(line: str, pod_size: int) -> bool:
+    """True if ANY replica group spans more than one pod."""
+    import numpy as np
+    groups, _ = _first_group_ids(line)
+    if groups is None:
+        return False
+    pods = np.asarray(groups) // pod_size
+    return bool(np.any(pods.min(axis=1) != pods.max(axis=1)))
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    cross_pod_bytes: float = 0.0      # traffic whose groups span pods
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str, pod_size: Optional[int] = None
+                     ) -> CollectiveStats:
+    """Sum per-instruction operand bytes for every collective op.
+
+    ``pod_size``: when given (e.g. 256 on the 2x16x16 mesh), each
+    instruction's replica groups are reconstructed (iota and explicit-list
+    formats) and classified as cross-pod if any group spans devices from
+    more than one pod."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("//") or " = " not in s:
+            continue
+        rhs = s.split(" = ", 1)[1]
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(r"\ball-reduce-done\(|\ball-gather-done\(", rhs):
+            continue  # bytes counted at -start
+        # result shapes = everything before the opcode token
+        op_pos = rhs.find(kind)
+        result_part = rhs[:op_pos]
+        operand_part = rhs[op_pos:]
+        res_shapes = _SHAPE_RE.findall(result_part)
+        res_bytes = sum(_shape_bytes(d, dims) for d, dims in res_shapes)
+        _, gsize = _first_group_ids(s) if "replica_groups" in s else (None, 1)
+        if kind == "all-gather":
+            op_bytes = res_bytes / max(gsize, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = res_bytes * max(gsize, 1)
+        else:
+            op_bytes = res_bytes
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0.0) + op_bytes
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+        if pod_size and _crosses_pod(s, pod_size):
+            st.cross_pod_bytes += op_bytes
+    return st
+
+
+@dataclass
+class Roofline:
+    flops: float                      # per-device HLO flops
+    bytes_accessed: float             # per-device HLO bytes
+    collectives: CollectiveStats
+    n_chips: int
+    model_flops: float = 0.0          # 6*N*D (or 6*N_active*D) global
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        intra = self.collectives.total_bytes - self.collectives.cross_pod_bytes
+        return (intra / ICI_BW_PER_LINK
+                + self.collectives.cross_pod_bytes / DCI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (per-device flops * chips): remat/redundancy."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collectives.total_bytes,
+            "collective_bytes_by_kind": self.collectives.bytes_by_kind,
+            "collective_counts": self.collectives.count_by_kind,
+            "cross_pod_bytes": self.collectives.cross_pod_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(compiled, mesh, model_flops: float = 0.0,
+            multi_pod: bool = False) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    n_chips = mesh.devices.size
+    pod_size = 256 if multi_pod else None
+    st = collective_stats(compiled.as_text(), pod_size)
+    return Roofline(flops=flops, bytes_accessed=bytes_accessed,
+                    collectives=st, n_chips=n_chips,
+                    model_flops=model_flops)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 * N(active) * D  (train);  2 * N * D_new (decode);
+    2 * N * D (prefill)."""
+    n_active = cfg.model.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

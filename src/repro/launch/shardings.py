@@ -1,0 +1,152 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with
+divisibility fallback so every assigned architecture lowers on the fixed
+production mesh (gemma3's 4 heads / kv=1, qwen's 60 experts, whisper's
+odd vocab are all handled by padding or fallback-to-replicated).
+
+Weights: ``embed`` is FSDP-sharded over "data"; ``mlp``/``heads``/
+``vocab`` are tensor-parallel over "model".  Activations: ``batch`` over
+("pod","data") [("cluster","data") on HFL meshes], hidden dims over
+"model".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models.common import named_sharding_for
+from repro.models.ssm import SSMState
+from repro.models.xlstm import MLSTMState, SLSTMState
+
+PyTree = Any
+
+# weight + activation rules (logical axis -> preferred mesh axes)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # weights
+    "embed": ("data",),             # FSDP
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "expert": (),                   # experts replicated; d_ff sharded
+    "kv_lora": ("model",),
+    "layers": (),
+    # activations
+    "batch": ("pod", "cluster", "data"),
+    "seq": (),
+    "embed_act": ("model",),
+    "mlp_act": ("model",),
+    "heads_act": ("model",),
+    "kv_heads_act": ("model",),
+    "vocab_act": ("model",),
+    # caches
+    "kv_seq": ("data", "model"),
+    "cluster": ("pod", "cluster"),
+}
+
+EXPERT_PARALLEL_RULES = dict(DEFAULT_RULES, expert=("model",), mlp=(),
+                             mlp_act=())
+
+
+def rules_for(cfg, mesh, overrides=()) -> Dict[str, Tuple[str, ...]]:
+    rules = dict(DEFAULT_RULES)
+    for k, v in overrides or ():
+        rules[k] = tuple(v)
+    return rules
+
+
+def params_shardings(axes_tree: PyTree, shapes_tree: PyTree, mesh,
+                     rules) -> PyTree:
+    """NamedSharding tree for parameters given their logical-axes tree."""
+    def one(axes, shape_struct):
+        return named_sharding_for(mesh, rules, axes, shape_struct.shape)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def batch_shardings(batch_specs: Dict[str, jax.ShapeDtypeStruct], mesh,
+                    rules, cluster_dim: bool = False) -> Dict[str, Any]:
+    """tokens/labels (B,S): batch over data axes.  patches/frames
+    (B,P,d): hidden over model.  HFL mode adds a leading cluster dim."""
+    out = {}
+    lead = ("cluster",) if cluster_dim else ()
+    for k, v in batch_specs.items():
+        if v.ndim - len(lead) == 2 and k in ("tokens", "labels"):
+            logical = lead + ("batch", "seq")
+        elif k in ("patches", "frames"):
+            logical = lead + ("batch", "seq", "embed_act")
+        elif k == "windows":
+            logical = lead + ("batch", "seq", None)
+        elif k == "targets":
+            logical = lead + ("batch", None)
+        else:
+            logical = (None,) * v.ndim
+        out[k] = named_sharding_for(mesh, rules, logical, v.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache shardings (decode dry-run inputs)
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_sharding(path_types, leaf, mesh, rules):
+    shape = leaf.shape
+    name = path_types
+    if name in ("k", "v"):           # KVCache (B,C,H,D)
+        logical = ("batch", "kv_seq", "kv_heads_act", None)
+    elif name == "c_kv":             # MLA latents (B,C,R)
+        logical = ("batch", "kv_seq", "mlp_act")
+    elif name == "k_rope":
+        logical = ("batch", "kv_seq", None)
+    elif name == "pos":
+        logical = ("batch", "kv_seq")
+    elif name == "conv":             # SSM conv buffer (B,W-1,ch)
+        logical = ("batch", None, "mlp_act")
+    elif name == "s":                # SSD state (B,H,N,P)
+        logical = ("batch", "heads_act", None, None)
+    elif name == "C":                # mLSTM matrix memory (B,H,hd,hd)
+        logical = ("batch", "heads_act", None, None)
+    elif name in ("n", "h", "c", "m"):
+        logical = ("batch", "heads_act") + (None,) * (leaf.ndim - 2)
+    elif name in ("cross_k", "cross_v"):   # (L,B,F,H,D)
+        logical = (None, "batch", None, "kv_heads_act", None)
+    elif name == "index":
+        logical = ()
+    else:
+        logical = (None,) * leaf.ndim
+    # stacked caches carry a leading layer dim: shift logical axes
+    if leaf.ndim > len(logical):
+        logical = (None,) * (leaf.ndim - len(logical)) + logical
+    logical = logical[:leaf.ndim]
+    return named_sharding_for(mesh, rules, logical, shape)
+
+
+def cache_shardings(cache_tree: PyTree, mesh, rules) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        field = None
+        for k in reversed(path):
+            if hasattr(k, "name"):
+                field = k.name
+                break
+            if hasattr(k, "key"):
+                field = str(k.key)
+                break
+        out.append(_cache_leaf_sharding(field, leaf, mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def scalar_shardings(tree: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda _: replicated(mesh), tree)

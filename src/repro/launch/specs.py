@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape)
+combination — weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import ModelApi
+
+SDS = jax.ShapeDtypeStruct
+
+
+def model_batch_specs(cfg: ArchConfig, shape: InputShape,
+                      with_labels: bool = True) -> Dict[str, SDS]:
+    """Batch specs for train (with labels) / prefill (without)."""
+    m = cfg.model
+    B, S = shape.global_batch, shape.seq_len
+    if m.family == "rnn":
+        return {"windows": SDS((B, 12, 1), jnp.float32),
+                "targets": SDS((B, 1), jnp.float32)}
+    out: Dict[str, SDS] = {}
+    if m.family == "vlm":
+        P = m.frontend.num_positions
+        out["patches"] = SDS((B, P, m.frontend.embed_dim), jnp.bfloat16)
+        out["tokens"] = SDS((B, S - P), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S - P), jnp.int32)
+    elif m.family == "audio":
+        F = m.frontend.num_positions
+        out["frames"] = SDS((B, F, m.frontend.embed_dim), jnp.bfloat16)
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def param_specs_and_axes(api: ModelApi) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct param tree, logical-axes tree) without
+    allocating: the axes tree is captured as a tracing side effect."""
+    holder = {}
+
+    def init_only_params(rng):
+        p, ax = api.init_params(rng)
+        holder["axes"] = ax
+        return p
+
+    p_struct = jax.eval_shape(init_only_params, jax.random.key(0))
+    return p_struct, holder["axes"]
+
+
+def cache_specs(api: ModelApi, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: api.init_cache(batch, max_len))
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape
+                       ) -> Tuple[SDS, SDS]:
+    B = shape.global_batch
+    if cfg.model.family == "rnn":
+        return SDS((B, 12, 1), jnp.float32), SDS((), jnp.int32)
+    return SDS((B, 1), jnp.int32), SDS((), jnp.int32)

@@ -1,0 +1,3 @@
+from repro.models.registry import ModelApi, make_model
+
+__all__ = ["ModelApi", "make_model"]

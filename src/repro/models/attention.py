@@ -1,0 +1,330 @@
+"""Attention: GQA (full / sliding-window / local:global), DeepSeek MLA,
+encoder-decoder cross attention; training/prefill and single-token decode.
+
+Training/prefill attention is *query-chunked* ("lazy flash"): for long
+sequences we scan over query chunks so peak memory is O(chunk * S) instead
+of O(S^2).  The Pallas flash kernels in ``repro.kernels`` are the TPU hot
+path; this module is the XLA path used for CPU execution and dry-run
+lowering (selected by config).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.common import ParamBuilder, shard
+from repro.models.rope import apply_rope
+
+_NEG_INF = -2.0e38  # fp32-safe mask value
+Q_CHUNK_THRESHOLD = 8192
+Q_CHUNK = 2048
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa(pb: ParamBuilder, path: str, d_model: int,
+             a: AttentionConfig) -> None:
+    hd = a.head_dim
+    pb.param(f"{path}/wq", (d_model, a.num_heads, hd),
+             ("embed", "heads", "head_dim"))
+    pb.param(f"{path}/wk", (d_model, a.num_kv_heads, hd),
+             ("embed", "kv_heads", "head_dim"))
+    pb.param(f"{path}/wv", (d_model, a.num_kv_heads, hd),
+             ("embed", "kv_heads", "head_dim"))
+    pb.param(f"{path}/wo", (a.num_heads, hd, d_model),
+             ("heads", "head_dim", "embed"))
+    if a.qk_norm:
+        pb.param(f"{path}/q_norm", (hd,), ("head_dim",), init="ones")
+        pb.param(f"{path}/k_norm", (hd,), ("head_dim",), init="ones")
+
+
+def init_mla(pb: ParamBuilder, path: str, d_model: int,
+             a: AttentionConfig) -> None:
+    m = a.mla
+    H = a.num_heads
+    pb.param(f"{path}/wq", (d_model, H, m.qk_nope_head_dim + m.qk_rope_head_dim),
+             ("embed", "heads", "head_dim"))
+    pb.param(f"{path}/w_dkv", (d_model, m.kv_lora_rank), ("embed", "kv_lora"))
+    pb.param(f"{path}/w_krope", (d_model, m.qk_rope_head_dim),
+             ("embed", "head_dim"))
+    pb.param(f"{path}/kv_norm", (m.kv_lora_rank,), ("kv_lora",), init="ones")
+    pb.param(f"{path}/w_uk", (m.kv_lora_rank, H, m.qk_nope_head_dim),
+             ("kv_lora", "heads", "head_dim"))
+    pb.param(f"{path}/w_uv", (m.kv_lora_rank, H, m.v_head_dim),
+             ("kv_lora", "heads", "head_dim"))
+    pb.param(f"{path}/wo", (H, m.v_head_dim, d_model),
+             ("heads", "head_dim", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with grouped heads + masking
+# ---------------------------------------------------------------------------
+
+def _rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          q_pos: jax.Array, k_pos: jax.Array,
+          causal: bool, window, soft_cap: float,
+          k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """q (B,Tq,Hq,D), k/v (B,Tk,Hkv,D'), positions (Tq,)/(Tk,).
+
+    ``window`` may be None, a python int, or a traced scalar (per-layer
+    local:global selection inside a homogeneous layer scan).
+    Returns (B,Tq,Hq,Dv)."""
+    B, Tq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if soft_cap:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    d = q_pos[:, None].astype(jnp.int32) - k_pos[None, :].astype(jnp.int32)
+    mask = jnp.ones(d.shape, bool) if not causal else (d >= 0)
+    if window is not None:
+        mask &= d < window
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+        scores = jnp.where(mask, scores, _NEG_INF)
+    else:
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Tq, Hq, v.shape[-1])
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, soft_cap):
+    """Scan over query chunks: peak memory O(Q_CHUNK * Tk)."""
+    B, Tq, Hq, D = q.shape
+    n = Tq // Q_CHUNK
+    qs = q.reshape(B, n, Q_CHUNK, Hq, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(n, Q_CHUNK)
+
+    def step(_, qc):
+        qi, pi = qc
+        o = _sdpa(qi, k, v, pi, k_pos, causal, window, soft_cap)
+        return None, o
+
+    _, outs = jax.lax.scan(step, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Tq, Hq, v.shape[-1])
+
+
+def sdpa(q, k, v, q_pos, k_pos, *, causal=True, window=None, soft_cap=0.0,
+         k_valid=None):
+    big = q.shape[1] >= Q_CHUNK_THRESHOLD and q.shape[1] % Q_CHUNK == 0
+    if big and k_valid is None:
+        return _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, soft_cap)
+    return _sdpa(q, k, v, q_pos, k_pos, causal, window, soft_cap, k_valid)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache.  ``k``/``v``: (B, C, Hkv, D); ``pos``: (B, C)
+    absolute position of each slot (-1 = empty); ``index``: () next write
+    slot (mod C for windowed caches)."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+    index: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, capacity: int, num_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def gqa_forward(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                positions: jax.Array, inv_freq: Optional[jax.Array],
+                window=None, causal: bool = True,
+                kv_source: Optional[jax.Array] = None) -> jax.Array:
+    """x (B,S,d).  ``kv_source`` switches to cross-attention (keys/values
+    from encoder output; no rope, no causal mask)."""
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if a.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    if kv_source is None:
+        k_pos = positions
+        if inv_freq is not None:
+            q = apply_rope(q, positions, inv_freq)
+            k = apply_rope(k, positions, inv_freq)
+    else:
+        causal = False
+        k_pos = jnp.arange(src.shape[1], dtype=jnp.int32)
+    q = shard(q, "batch", "seq", "heads_act", None)
+    k = shard(k, "batch", "seq", "kv_heads_act", None)
+    v = shard(v, "batch", "seq", "kv_heads_act", None)
+    out = sdpa(q, k, v, positions, k_pos, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+               pos: jax.Array, cache: KVCache,
+               inv_freq: Optional[jax.Array], window=None,
+               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+               ) -> Tuple[jax.Array, KVCache]:
+    """Single-token decode.  x (B,1,d); pos () absolute position.
+    With ``cross_kv`` the cache is ignored (encoder KV precomputed)."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if a.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+    if cross_kv is not None:
+        ck, cv = cross_kv
+        k_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        out = sdpa(q, ck, cv, pos[None], k_pos, causal=False)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qk_norm:
+        k = _rms_head_norm(k, p["k_norm"])
+    if inv_freq is not None:
+        q = apply_rope(q, pos[None][None].repeat(B, 0), inv_freq)
+        k = apply_rope(k, pos[None][None].repeat(B, 0), inv_freq)
+    slot = cache.index % cache.capacity
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), slot, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), slot, axis=1),
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.full((B, 1), pos, jnp.int32), slot, axis=1),
+        index=cache.index + 1,
+    )
+    valid = new_cache.pos >= 0
+    if window is not None:
+        valid &= (pos - new_cache.pos) < window
+    # one query vs cache slots; mask by stored absolute positions
+    # (cache may be stored quantized, e.g. f8 — upcast for the dot)
+    out = _sdpa(q, new_cache.k.astype(q.dtype), new_cache.v.astype(q.dtype),
+                pos[None], jnp.zeros((cache.capacity,), jnp.int32),
+                causal=False, window=None, soft_cap=a.logit_soft_cap,
+                k_valid=valid)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) forward + absorbed decode
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    """Compressed KV cache: ``c_kv`` (B,C,R) latents, ``k_rope`` (B,C,Dr)."""
+    c_kv: jax.Array
+    k_rope: jax.Array
+    pos: jax.Array
+    index: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.c_kv.shape[1]
+
+
+def init_mla_cache(batch: int, capacity: int, a: AttentionConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    m = a.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def _mla_latents(p, a, x, positions, inv_freq):
+    m = a.mla
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = _rms_head_norm(c_kv, p["kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])
+    if inv_freq is not None:
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            inv_freq)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                positions: jax.Array, inv_freq: Optional[jax.Array],
+                ) -> jax.Array:
+    m = a.mla
+    B, S, _ = x.shape
+    H = a.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if inv_freq is not None:
+        q_rope = apply_rope(q_rope, positions, inv_freq)
+    c_kv, k_rope = _mla_latents(p, a, x, positions, inv_freq)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    # concat nope+rope per head (rope part broadcast across heads)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = sdpa(q_full, k_full, v, positions, positions, causal=True)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+               pos: jax.Array, cache: MLACache,
+               inv_freq: Optional[jax.Array]) -> Tuple[jax.Array, MLACache]:
+    """Absorbed MLA decode: queries projected into latent space so scores
+    are computed against the *compressed* cache directly (beyond-paper
+    efficiency; DeepSeek-V2 §"absorption")."""
+    m = a.mla
+    B = x.shape[0]
+    H = a.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if inv_freq is not None:
+        q_rope = apply_rope(q_rope, pos[None][None].repeat(B, 0), inv_freq)
+    c_new, kr_new = _mla_latents(p, a, x, pos[None][None].repeat(B, 0),
+                                 inv_freq)
+    slot = cache.index % cache.capacity
+    cache = MLACache(
+        c_kv=jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), slot, 1),
+        k_rope=jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, kr_new.astype(cache.k_rope.dtype), slot, 1),
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.full((B, 1), pos, jnp.int32), slot, 1),
+        index=cache.index + 1,
+    )
+    # absorb: q_c[b,h,r] = sum_k q_nope[b,h,k] * w_uk[r,h,k]
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    c_kv = cache.c_kv.astype(x.dtype)      # upcast quantized latents
+    s_nope = jnp.einsum("bshr,bcr->bhsc", q_c, c_kv)
+    s_rope = jnp.einsum("bshr,bcr->bhsc", q_rope,
+                        cache.k_rope.astype(x.dtype))
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    valid = (cache.pos >= 0)[:, None, None, :]
+    scores = jnp.where(valid, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhsc,bcr->bshr", probs, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache

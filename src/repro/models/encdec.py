@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB per the assignment carve-out:
+``input_specs()`` delivers precomputed frame embeddings (B, F, d) straight
+into the encoder.  Positions are sinusoidal (whisper uses sinusoidal
+encoder positions; we use sinusoidal on both sides instead of a learned
+decoder table so the 32k decode stress shape needs no giant position
+parameter — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import ParamBuilder, stack_axes, stack_params, to_dtype
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embedding, init_mlp, init_norm,
+                                 logits_from_hidden)
+from repro.models.transformer import sinusoidal_positions
+
+
+def _init_enc_layer(rng, cfg):
+    pb = ParamBuilder(rng, dtype=to_dtype(cfg.param_dtype))
+    init_norm(pb, "ln1", cfg.d_model, cfg.norm)
+    attn.init_gqa(pb, "attn", cfg.d_model, cfg.attention)
+    init_norm(pb, "ln2", cfg.d_model, cfg.norm)
+    init_mlp(pb, "mlp", cfg.d_model, cfg.d_ff, cfg.act)
+    return pb.build()
+
+
+def _init_dec_layer(rng, cfg):
+    pb = ParamBuilder(rng, dtype=to_dtype(cfg.param_dtype))
+    init_norm(pb, "ln1", cfg.d_model, cfg.norm)
+    attn.init_gqa(pb, "self_attn", cfg.d_model, cfg.attention)
+    init_norm(pb, "ln_x", cfg.d_model, cfg.norm)
+    attn.init_gqa(pb, "cross_attn", cfg.d_model, cfg.attention)
+    init_norm(pb, "ln2", cfg.d_model, cfg.norm)
+    init_mlp(pb, "mlp", cfg.d_model, cfg.d_ff, cfg.act)
+    return pb.build()
+
+
+def init_params(rng, cfg: ModelConfig):
+    pb = ParamBuilder(rng, dtype=to_dtype(cfg.param_dtype))
+    init_embedding(pb, cfg)
+    enc = [_init_enc_layer(jax.random.fold_in(rng, 4000 + i), cfg)
+           for i in range(cfg.encoder_layers)]
+    dec = [_init_dec_layer(jax.random.fold_in(rng, 5000 + i), cfg)
+           for i in range(cfg.num_layers)]
+    pb.subtree("encoder", stack_params([p for p, _ in enc]),
+               stack_axes(enc[0][1]))
+    pb.subtree("decoder", stack_params([p for p, _ in dec]),
+               stack_axes(dec[0][1]))
+    init_norm(pb, "enc_norm", cfg.d_model, cfg.norm)
+    init_norm(pb, "final_norm", cfg.d_model, cfg.norm)
+    return pb.build()
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           remat: str = "layer") -> jax.Array:
+    """frames (B,F,d) from the stub frontend -> encoder output (B,F,d)."""
+    F = frames.shape[1]
+    x = frames + sinusoidal_positions(F, cfg.d_model).astype(frames.dtype)[None]
+    positions = jnp.arange(F, dtype=jnp.int32)
+
+    def body(xc, p):
+        h = apply_norm(p["ln1"], xc, cfg.norm, cfg.norm_eps)
+        xc = xc + attn.gqa_forward(p["attn"], cfg.attention, h, positions,
+                                   None, causal=False)
+        h = apply_norm(p["ln2"], xc, cfg.norm, cfg.norm_eps)
+        return xc + apply_mlp(p["mlp"], h, cfg.act), None
+
+    body_fn = jax.checkpoint(body) if remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def _dec_layer(cfg, p, x, positions, enc_out):
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    x = x + attn.gqa_forward(p["self_attn"], cfg.attention, h, positions,
+                             None, causal=True)
+    h = apply_norm(p["ln_x"], x, cfg.norm, cfg.norm_eps)
+    x = x + attn.gqa_forward(p["cross_attn"], cfg.attention, h, positions,
+                             None, kv_source=enc_out)
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, cfg.act)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embeds: Optional[jax.Array] = None,
+            remat: str = "layer") -> Tuple[jax.Array, jax.Array]:
+    """extra_embeds = stub frame embeddings (B,F,d) -> logits over decoder
+    positions."""
+    assert extra_embeds is not None, "whisper needs frame embeddings"
+    enc_out = encode(params, cfg, extra_embeds, remat)
+    x = embed_tokens(params, cfg, tokens)
+    S = x.shape[1]
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, p):
+        return _dec_layer(cfg, p, xc, positions, enc_out), None
+
+    body_fn = jax.checkpoint(body) if remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Self-attention caches + precomputed cross K/V slots (filled by
+    ``prime_cross_cache`` from the encoder output)."""
+    if dtype is None:
+        from repro.models.common import to_dtype
+        dtype = to_dtype(cfg.dtype)
+    a = cfg.attention
+    F = cfg.frontend.num_positions
+    per_self = [attn.init_kv_cache(batch, max_len, a.num_kv_heads,
+                                   a.head_dim, dtype)
+                for _ in range(cfg.num_layers)]
+    cross_k = jnp.zeros((cfg.num_layers, batch, F, a.num_kv_heads,
+                         a.head_dim), dtype)
+    return {
+        "self": jax.tree.map(lambda *xs: jnp.stack(xs), *per_self),
+        "cross_k": cross_k,
+        "cross_v": jnp.zeros_like(cross_k),
+    }
+
+
+def prime_cross_cache(params, cfg: ModelConfig, cache, enc_out: jax.Array):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    ks, vs = [], []
+    for i in range(cfg.num_layers):
+        p = jax.tree.map(lambda t: t[i], params["decoder"])["cross_attn"]
+        ks.append(jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"]))
+        vs.append(jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"]))
+    return {**cache, "cross_k": jnp.stack(ks).astype(cache["cross_k"].dtype),
+            "cross_v": jnp.stack(vs).astype(cache["cross_v"].dtype)}
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                cache, extra_embeds=None):
+    x = embed_tokens(params, cfg, tokens)
+    x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(x.dtype)[None]
+    a = cfg.attention
+
+    def body(xc, xs):
+        p, c_self, ck, cv = xs
+        h = apply_norm(p["ln1"], xc, cfg.norm, cfg.norm_eps)
+        y, c2 = attn.gqa_decode(p["self_attn"], a, h, pos, c_self, None)
+        xc = xc + y
+        h = apply_norm(p["ln_x"], xc, cfg.norm, cfg.norm_eps)
+        y, _ = attn.gqa_decode(p["cross_attn"], a, h, pos, c2, None,
+                               cross_kv=(ck, cv))
+        xc = xc + y
+        h = apply_norm(p["ln2"], xc, cfg.norm, cfg.norm_eps)
+        return xc + apply_mlp(p["mlp"], h, cfg.act), c2
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    new_cache = {**cache, "self": new_self}
+    return logits_from_hidden(params, cfg, x), new_cache

@@ -1,0 +1,72 @@
+"""The paper's own model (§V-B1): stacked GRU for univariate traffic-speed
+forecasting on METR-LA-style windows.
+
+2 layers, hidden 128, batch 16, lr 1e-4 in the paper; serialized size
+~594 KB — the payload of every HFL model exchange (§V-D cost model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamBuilder
+
+
+def init_params(rng, cfg: ModelConfig):
+    pb = ParamBuilder(rng, dtype=jnp.float32)
+    h = cfg.rnn_hidden
+    for i in range(cfg.rnn_layers):
+        din = 1 if i == 0 else h
+        # fused gates: reset, update, candidate
+        pb.param(f"gru/{i}/w_x", (din, 3 * h), (None, "mlp"))
+        pb.param(f"gru/{i}/w_h", (h, 3 * h), (None, "mlp"))
+        pb.param(f"gru/{i}/b", (3 * h,), ("mlp",), init="zeros")
+    pb.param("head/w", (h, 1), ("mlp", None))
+    pb.param("head/b", (1,), (None,), init="zeros")
+    return pb.build()
+
+
+def _gru_layer(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """x (B,T,din) -> (B,T,h)."""
+    B, T, _ = x.shape
+    h_dim = p["w_h"].shape[0]
+    xw = jnp.einsum("btd,de->bte", x, p["w_x"]) + p["b"]
+
+    def step(h, xt):
+        hw = h @ p["w_h"]
+        xr, xz, xn = jnp.split(xt, 3, axis=-1)
+        hr, hz, hn = jnp.split(hw, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        h2 = (1.0 - z) * n + z * h
+        return h2, h2
+
+    h0 = jnp.zeros((B, h_dim), x.dtype)
+    _, hs = jax.lax.scan(step, h0, xw.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def forward(params, cfg: ModelConfig, windows: jax.Array) -> jax.Array:
+    """windows (B,T,1) -> prediction (B,1) of the next value."""
+    x = windows
+    for i in range(cfg.rnn_layers):
+        x = _gru_layer(params["gru"][str(i)], x)
+    last = x[:, -1, :]
+    return last @ params["head"]["w"] + params["head"]["b"]
+
+
+def mse_loss(params, cfg: ModelConfig, windows: jax.Array,
+             targets: jax.Array) -> jax.Array:
+    pred = forward(params, cfg, windows)
+    return jnp.mean(jnp.square(pred - targets))
+
+
+def decode_step(params, cfg: ModelConfig, windows: jax.Array, pos=None,
+                cache=None):
+    """Inference = one forward over the window (the paper's per-request
+    unit of work)."""
+    return forward(params, cfg, windows), cache

@@ -1,0 +1,155 @@
+"""zamba2-style hybrid assembly: a stack of Mamba2 blocks with ONE shared
+transformer block (attention + MLP, single parameter set) applied after
+every ``shared_attn_every`` Mamba2 layers [arXiv:2411.15242].
+
+Simplifications vs the released checkpoint, recorded in DESIGN.md:
+the per-invocation LoRA adapters on the shared block and the
+concat-with-embedding input trick are omitted; the shared block consumes
+the running residual stream directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import ParamBuilder, stack_axes, stack_params, to_dtype
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embedding, init_mlp, init_norm,
+                                 logits_from_hidden)
+from repro.models.rope import rope_frequencies
+from repro.models.ssm import (SSMState, init_mamba2, init_ssm_state,
+                              mamba2_decode, mamba2_forward)
+
+
+def _segments(cfg: ModelConfig):
+    """Split layer indices into runs of ``shared_attn_every``; the shared
+    attention block runs after each *complete* run."""
+    k = cfg.shared_attn_every
+    L = cfg.num_layers
+    segs, start = [], 0
+    while start < L:
+        end = min(start + k, L)
+        segs.append((start, end, end - start == k))
+        start = end
+    return segs
+
+
+def init_params(rng, cfg: ModelConfig):
+    pb = ParamBuilder(rng, dtype=to_dtype(cfg.param_dtype))
+    init_embedding(pb, cfg)
+    per = []
+    for i in range(cfg.num_layers):
+        lb = ParamBuilder(jax.random.fold_in(rng, 3000 + i),
+                          dtype=to_dtype(cfg.param_dtype))
+        init_norm(lb, "ln", cfg.d_model, cfg.norm)
+        init_mamba2(lb, "mamba", cfg.d_model, cfg.ssm)
+        per.append(lb.build())
+    pb.subtree("mamba_layers", stack_params([p for p, _ in per]),
+               stack_axes(per[0][1]))
+    # the single shared attention+MLP block
+    sb = ParamBuilder(jax.random.fold_in(rng, 9999),
+                      dtype=to_dtype(cfg.param_dtype))
+    init_norm(sb, "ln1", cfg.d_model, cfg.norm)
+    attn.init_gqa(sb, "attn", cfg.d_model, cfg.attention)
+    init_norm(sb, "ln2", cfg.d_model, cfg.norm)
+    init_mlp(sb, "mlp", cfg.d_model, cfg.d_ff, cfg.act)
+    sp, sa = sb.build()
+    pb.subtree("shared", sp, sa)
+    init_norm(pb, "final_norm", cfg.d_model, cfg.norm)
+    return pb.build()
+
+
+def _mamba_layer(cfg, p, x):
+    h = apply_norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    return x + mamba2_forward(p["mamba"], cfg.d_model, cfg.ssm, h)
+
+
+def _shared_block(cfg, p, x, positions, inv_freq, window):
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    x = x + attn.gqa_forward(p["attn"], cfg.attention, h, positions,
+                             inv_freq, window=window)
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, cfg.act)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embeds=None, remat: str = "layer"
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = embed_tokens(params, cfg, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    a = cfg.attention
+    inv_freq = rope_frequencies(a.head_dim, a.rope_theta, a.rope_fraction)
+    window = a.window if a.window else None
+
+    def body(xc, p):
+        return _mamba_layer(cfg, p, xc), None
+
+    body_fn = jax.checkpoint(body) if remat != "none" else body
+    for (s, e, complete) in _segments(cfg):
+        seg = jax.tree.map(lambda t: t[s:e], params["mamba_layers"])
+        x, _ = jax.lax.scan(body_fn, x, seg)
+        if complete:
+            x = _shared_block(cfg, params["shared"], x, positions,
+                              inv_freq, window)
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    if dtype is None:
+        from repro.models.common import to_dtype
+        dtype = to_dtype(cfg.dtype)
+    a = cfg.attention
+    cap = min(max_len, a.window) if a.window else max_len
+    states = [init_ssm_state(batch, cfg.d_model, cfg.ssm)
+              for _ in range(cfg.num_layers)]
+    shared_caches = {
+        str(k): attn.init_kv_cache(batch, cap, a.num_kv_heads, a.head_dim,
+                                   dtype)
+        for k, (s, e, complete) in enumerate(_segments(cfg)) if complete}
+    return {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+        "shared": shared_caches,
+    }
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                cache, extra_embeds=None):
+    x = embed_tokens(params, cfg, tokens)
+    a = cfg.attention
+    inv_freq = rope_frequencies(a.head_dim, a.rope_theta, a.rope_fraction)
+    window = a.window if a.window else None
+
+    def body(xc, xs):
+        p, st = xs
+        h = apply_norm(p["ln"], xc, cfg.norm, cfg.norm_eps)
+        y, st2 = mamba2_decode(p["mamba"], cfg.d_model, cfg.ssm, h, st)
+        return xc + y, st2
+
+    new_shared = {}
+    new_states = []
+    for k, (s, e, complete) in enumerate(_segments(cfg)):
+        seg_p = jax.tree.map(lambda t: t[s:e], params["mamba_layers"])
+        seg_c = jax.tree.map(lambda t: t[s:e], cache["mamba"])
+        x, st_out = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_states.append(st_out)
+        if complete:
+            sp = params["shared"]
+            h = apply_norm(sp["ln1"], x, cfg.norm, cfg.norm_eps)
+            y, c2 = attn.gqa_decode(sp["attn"], a, h, pos,
+                                    cache["shared"][str(k)], inv_freq,
+                                    window=window)
+            x = x + y
+            h = apply_norm(sp["ln2"], x, cfg.norm, cfg.norm_eps)
+            x = x + apply_mlp(sp["mlp"], h, cfg.act)
+            new_shared[str(k)] = c2
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    new_mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *new_states)
+    return logits_from_hidden(params, cfg, x), {"mamba": new_mamba,
+                                                "shared": new_shared}

@@ -1,0 +1,105 @@
+"""Basic layers: norms, MLPs, embeddings, logits head."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamBuilder, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(pb: ParamBuilder, path: str, dim: int, kind: str) -> None:
+    pb.param(f"{path}/scale", (dim,), ("embed",), init="ones")
+    if kind == "layernorm":
+        pb.param(f"{path}/bias", (dim,), ("embed",), init="zeros")
+
+
+def apply_norm(p: Dict[str, Any], x: jax.Array, kind: str,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for act='silu', plain 2-matrix MLP for act='gelu')
+# ---------------------------------------------------------------------------
+
+def init_mlp(pb: ParamBuilder, path: str, d_model: int, d_ff: int,
+             act: str, ff_axis: str = "mlp") -> None:
+    if act == "silu":
+        pb.param(f"{path}/wi_gate", (d_model, d_ff), ("embed", ff_axis))
+        pb.param(f"{path}/wi_up", (d_model, d_ff), ("embed", ff_axis))
+    else:
+        pb.param(f"{path}/wi", (d_model, d_ff), ("embed", ff_axis))
+    pb.param(f"{path}/wo", (d_ff, d_model), (ff_axis, "embed"))
+
+
+def apply_mlp(p: Dict[str, Any], x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp_act")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits
+# ---------------------------------------------------------------------------
+
+def init_embedding(pb: ParamBuilder, cfg: ModelConfig) -> None:
+    v = cfg.padded_vocab
+    pb.param("embed/table", (v, cfg.d_model), ("vocab", "embed"),
+             init="normal", scale=0.02)
+    if not cfg.tie_embeddings:
+        pb.param("lm_head/w", (cfg.d_model, v), ("embed", "vocab"))
+
+
+def embed_tokens(params: Dict[str, Any], cfg: ModelConfig,
+                 tokens: jax.Array) -> jax.Array:
+    x = params["embed"]["table"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", "seq", "embed_act")
+
+
+def logits_from_hidden(params: Dict[str, Any], cfg: ModelConfig,
+                       x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return shard(logits, "batch", "seq", "vocab_act")
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab_size: int) -> jax.Array:
+    """Mean next-token CE; ignores label positions >= vocab_size or < 0."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

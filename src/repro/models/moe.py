@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k routing.
+
+Dispatch is *sort-based with capacity* (megablocks-style adapted to XLA):
+token->expert assignments are sorted by expert id, each expert processes a
+fixed-capacity contiguous slice via ``lax.dynamic_slice`` inside a scan.
+This avoids the O(tokens x experts x capacity) one-hot dispatch tensors of
+GShard-style einsum dispatch while remaining a static-shape program, and
+maps onto the TPU as E sequential (capacity, d) x (d, d_ff) matmuls whose
+d_ff dimension is sharded over the "model" mesh axis.
+
+Tokens beyond an expert's capacity are dropped (contribute 0); the
+load-balance auxiliary loss pushes the router toward uniform load.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import apply_mlp, init_mlp
+
+
+def init_moe(pb: ParamBuilder, path: str, d_model: int, moe: MoEConfig,
+             act: str) -> None:
+    E = moe.num_experts
+    pb.param(f"{path}/router", (d_model, E), ("embed", None),
+             dtype=jnp.float32)
+    if act == "silu":
+        pb.param(f"{path}/wi_gate", (E, d_model, moe.d_expert),
+                 ("expert", "embed", "mlp"))
+        pb.param(f"{path}/wi_up", (E, d_model, moe.d_expert),
+                 ("expert", "embed", "mlp"))
+    else:
+        pb.param(f"{path}/wi", (E, d_model, moe.d_expert),
+                 ("expert", "embed", "mlp"))
+    pb.param(f"{path}/wo", (E, moe.d_expert, d_model),
+             ("expert", "mlp", "embed"))
+    shared = moe.d_shared if moe.d_shared else moe.num_shared * moe.d_expert
+    if shared:
+        init_mlp(pb, f"{path}/shared", d_model, shared, act)
+
+
+def _capacity(num_tokens: int, moe: MoEConfig) -> int:
+    c = math.ceil(num_tokens * moe.top_k / moe.num_experts
+                  * moe.capacity_factor)
+    c = max(8, -(-c // 8) * 8)  # round up to 8
+    return min(c, num_tokens * moe.top_k)  # never above total assignments
+
+
+def apply_moe(p: Dict[str, Any], moe: MoEConfig, x: jax.Array, act: str,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    t = B * S
+    E, K = moe.num_experts, moe.top_k
+    xf = x.reshape(t, d)
+
+    # --- routing (fp32) ---
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                     # (t, K)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (t * K)
+    P = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * P) * moe.aux_loss_coef
+
+    # --- sort token-slot assignments by expert ---
+    flat_e = topi.reshape(t * K)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), K)
+    flat_w = topw.reshape(t * K)
+    order = jnp.argsort(flat_e)
+    sort_e = flat_e[order]
+    sort_tok = flat_tok[order]
+    sort_w = flat_w[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    C = _capacity(t, moe)
+    # pad so dynamic_slice never clamps its start (clamping would shift
+    # the slice away from the idx bookkeeping below)
+    gathered = jnp.concatenate(
+        [xf[sort_tok], jnp.zeros((C, d), xf.dtype)], axis=0)  # (t*K + C, d)
+    use_gate = "wi_gate" in p
+
+    def one_expert(out_flat, inputs):
+        if use_gate:
+            w1g, w1u, w2, st, cnt = inputs
+        else:
+            w1, w2, st, cnt = inputs
+        xs = jax.lax.dynamic_slice(gathered, (st, jnp.int32(0)), (C, d))
+        idx = st + jnp.arange(C, dtype=jnp.int32)
+        valid = (jnp.arange(C) < cnt) & (idx < t * K)
+        idx = jnp.minimum(idx, t * K - 1)
+        toks = jnp.where(valid, sort_tok[idx], t)            # t = trash row
+        ws = jnp.where(valid, sort_w[idx], 0.0)
+        if use_gate:
+            g = xs @ w1g
+            u = xs @ w1u
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * u
+        else:
+            h = jax.nn.gelu((xs @ w1).astype(jnp.float32)).astype(xs.dtype)
+        y = (h @ w2) * ws[:, None].astype(xs.dtype)
+        return out_flat.at[toks].add(y), None
+
+    out_flat = jnp.zeros((t + 1, d), x.dtype)                # +1 trash row
+    if use_gate:
+        xs_stack = (p["wi_gate"], p["wi_up"], p["wo"], starts, counts)
+    else:
+        xs_stack = (p["wi"], p["wo"], starts, counts)
+    out_flat, _ = jax.lax.scan(one_expert, out_flat, xs_stack)
+    out = out_flat[:t].reshape(B, S, d)
+    out = shard(out, "batch", "seq", "embed_act")
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, act)
+    return out, aux

@@ -1,0 +1,100 @@
+"""Unified model API: one entry point per architecture family.
+
+``make_model(arch_cfg)`` returns a :class:`ModelApi` whose functions share
+a uniform batch convention:
+
+  - LM families:   batch = {"tokens": (B,S) i32, "labels": (B,S) i32}
+  - vlm:           + "patches": (B,P,d) stub patch embeddings (prefix)
+  - audio:         + "frames": (B,F,d) stub frame embeddings (encoder)
+  - rnn (paper):   batch = {"windows": (B,T,1) f32, "targets": (B,1) f32}
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ModelConfig
+from repro.models import encdec, gru, hybrid, transformer, xlstm
+from repro.models.layers import cross_entropy_loss
+
+
+class ModelApi(NamedTuple):
+    cfg: ArchConfig
+    init_params: Callable[[jax.Array], Tuple[Any, Any]]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
+    init_cache: Callable[[int, int], Any]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+
+
+def _extra(batch: Dict[str, jax.Array], m: ModelConfig):
+    if m.family == "vlm":
+        return batch.get("patches")
+    if m.family == "audio":
+        return batch.get("frames")
+    return None
+
+
+def make_model(cfg: ArchConfig) -> ModelApi:
+    m = cfg.model
+    remat = cfg.run.remat
+
+    if m.family == "rnn":
+        def fwd(params, batch):
+            return gru.forward(params, m, batch["windows"]), jnp.zeros(())
+
+        def loss(params, batch):
+            return gru.mse_loss(params, m, batch["windows"],
+                                batch["targets"])
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda rng: gru.init_params(rng, m),
+            forward=fwd,
+            loss=loss,
+            init_cache=lambda b, n: None,
+            decode_step=lambda params, tokens, pos, cache, **kw:
+                gru.decode_step(params, m, tokens, pos, cache),
+        )
+
+    if m.family == "ssm":          # xlstm
+        mod = xlstm
+    elif m.family == "hybrid":     # zamba2
+        mod = hybrid
+    elif m.family == "audio":      # whisper
+        mod = encdec
+    else:                          # dense / moe / vlm
+        mod = transformer
+
+    def fwd(params, batch):
+        kw = {}
+        if mod in (transformer, hybrid, encdec, xlstm):
+            kw["remat"] = remat
+        return mod.forward(params, m, batch["tokens"],
+                           extra_embeds=_extra(batch, m), **kw)
+
+    def loss(params, batch):
+        logits, aux = fwd(params, batch)
+        labels = batch["labels"]
+        if m.family == "vlm" and "patches" in batch:
+            P = batch["patches"].shape[1]
+            pad = jnp.full(labels.shape[:1] + (P,), -100, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return cross_entropy_loss(logits, labels, m.vocab_size) + aux
+
+    def decode(params, tokens, pos, cache, **kw):
+        return mod.decode_step(params, m, tokens, pos, cache, **kw)
+
+    cache_dtype = (jnp.dtype(cfg.run.cache_dtype)
+                   if cfg.run.cache_dtype else None)
+
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda rng: mod.init_params(rng, m),
+        forward=fwd,
+        loss=loss,
+        init_cache=lambda b, n: mod.init_cache(m, b, n, dtype=cache_dtype),
+        decode_step=decode,
+    )

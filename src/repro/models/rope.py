@@ -1,0 +1,37 @@
+"""Rotary position embeddings (full, partial, dual-base local/global)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_frequencies(head_dim: int, theta: float,
+                     fraction: float = 1.0) -> np.ndarray:
+    """Inverse frequencies for the rotated sub-dimension.
+
+    Returns (rot_dim // 2,) float32 as a *numpy* array (static metadata,
+    safe to stack/convert at trace time).  ``fraction`` < 1 rotates only
+    the leading ``fraction * head_dim`` dims (stablelm partial rotary)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    k = np.arange(rot // 2, dtype=np.float32)
+    return (1.0 / (theta ** (2.0 * k / rot))).astype(np.float32)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               inv_freq: jax.Array) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq).
+
+    Only the leading 2*len(inv_freq) dims rotate; the rest pass through.
+    """
+    rot = 2 * inv_freq.shape[-1]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]   # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)

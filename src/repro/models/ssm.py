@@ -1,0 +1,206 @@
+"""Mamba2 (State Space Duality) block: chunked parallel training scan and
+O(1)-state decode.  Used by zamba2 (hybrid) and available standalone.
+
+Recurrence per head (state N x P):
+    S_t = a_t * S_{t-1} + B_t (x) u_t        a_t = exp(dt_t * A),  u_t = dt_t * x_t
+    y_t = C_t . S_t + D * x_t
+
+Training uses the chunked SSD algorithm: intra-chunk attention-like matmuls
+plus an inter-chunk state recurrence (lax.scan over chunks).  The Pallas
+kernel in ``repro.kernels.mamba_scan`` implements the same math with VMEM
+tiling; this module is the XLA path and the kernels' oracle source.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import ParamBuilder, shard
+
+
+class SSMState(NamedTuple):
+    """Decode-time state: conv ring buffer + SSD state."""
+    conv: jax.Array   # (B, W-1, conv_ch)
+    s: jax.Array      # (B, H, N, P)
+
+
+def mamba_dims(d_model: int, s: SSMConfig) -> Dict[str, int]:
+    d_in = d_model * s.expand
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.ngroups * s.state_dim
+    return dict(d_in=d_in, H=H, P=s.head_dim, N=s.state_dim,
+                G=s.ngroups, conv_ch=conv_ch)
+
+
+def init_mamba2(pb: ParamBuilder, path: str, d_model: int,
+                s: SSMConfig) -> None:
+    dd = mamba_dims(d_model, s)
+    d_in, H, N, G, conv_ch = dd["d_in"], dd["H"], dd["N"], dd["G"], dd["conv_ch"]
+    # fused input projection: [z, x, B, C, dt]
+    pb.param(f"{path}/in_proj", (d_model, 2 * d_in + 2 * G * N + H),
+             ("embed", "mlp"))
+    pb.param(f"{path}/conv_w", (s.conv_width, conv_ch), (None, "mlp"))
+    pb.param(f"{path}/conv_b", (conv_ch,), ("mlp",), init="zeros")
+    pb.param(f"{path}/A_log", (H,), ("heads",), init="zeros", dtype=jnp.float32)
+    pb.param(f"{path}/D", (H,), ("heads",), init="ones", dtype=jnp.float32)
+    pb.param(f"{path}/dt_bias", (H,), ("heads",), init="zeros",
+             dtype=jnp.float32)
+    pb.param(f"{path}/norm_scale", (d_in,), ("mlp",), init="ones")
+    pb.param(f"{path}/out_proj", (d_in, d_model), ("mlp", "embed"))
+
+
+def _split_proj(p, x, d_model, s: SSMConfig):
+    dd = mamba_dims(d_model, s)
+    d_in, GN, H = dd["d_in"], dd["G"] * dd["N"], dd["H"]
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xin = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + GN]
+    Cm = zxbcdt[..., 2 * d_in + GN:2 * d_in + 2 * GN]
+    dt = zxbcdt[..., 2 * d_in + 2 * GN:]
+    return z, xin, Bm, Cm, dt, dd
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc (B,L,ch), w (W,ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for k in range(W):  # W is small (4); unrolled adds fuse well
+        out = out + pad[:, k:k + xbc.shape[1], :] * w[k]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                s_init: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh (B,L,H,P); dt (B,L,H) post-softplus; A (H,) negative; Bm/Cm (B,L,G,N).
+    Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    B, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    c = L // chunk
+    Q = chunk
+
+    la = (dt * A).astype(jnp.float32)                        # log a_t (B,L,H)
+    u = (xh.astype(jnp.float32) * dt[..., None])             # (B,L,H,P)
+
+    def r(x_, sh):  # reshape to chunks
+        return x_.reshape((B, c, Q) + sh)
+    la_c = r(la, (H,))
+    u_c = r(u, (H, P))
+    B_c = jnp.repeat(r(Bm.astype(jnp.float32), (G, N)), rep, axis=3)  # (B,c,Q,H,N)
+    C_c = jnp.repeat(r(Cm.astype(jnp.float32), (G, N)), rep, axis=3)
+
+    cum = jnp.cumsum(la_c, axis=2)                           # (B,c,Q,H)
+    # intra-chunk: decay matrix per head, masked lower-triangular
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,c,i,j,H)
+    ii = jnp.arange(Q)
+    tri = (ii[:, None] >= ii[None, :])
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", C_c, B_c) * decay
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, u_c)
+
+    # per-chunk local end state: sum_j exp(cum_Q - cum_j) B_j (x) u_j
+    wlast = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,c,Q,H)
+    s_local = jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", B_c, u_c, wlast)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                      # (B,c,H)
+
+    s0 = (jnp.zeros((B, H, N, P), jnp.float32) if s_init is None
+          else s_init.astype(jnp.float32))
+
+    def chunk_step(s_prev, inp):
+        a_l, s_loc = inp                                     # (B,H), (B,H,N,P)
+        s_out = a_l[..., None, None] * s_prev + s_loc
+        return s_out, s_prev                                  # emit state *before* chunk
+
+    s_last, s_prevs = jax.lax.scan(
+        chunk_step, s0,
+        (a_chunk.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)               # (B,c,H,N,P)
+
+    w_in = jnp.exp(cum)                                      # L_i within chunk
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", C_c, s_prevs, w_in)
+
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y.astype(xh.dtype), s_last
+
+
+def mamba2_forward(p: Dict[str, Any], d_model: int, s: SSMConfig,
+                   x: jax.Array) -> jax.Array:
+    z, xin, Bm, Cm, dt, dd = _split_proj(p, x, d_model, s)
+    H, P, N, G = dd["H"], dd["P"], dd["N"], dd["G"]
+    B, L, _ = x.shape
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :dd["d_in"]].reshape(B, L, H, P)
+    Bm = xbc[..., dd["d_in"]:dd["d_in"] + G * N].reshape(B, L, G, N)
+    Cm = xbc[..., dd["d_in"] + G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(s.chunk, L)
+    if L % chunk:
+        raise ValueError(f"seq len {L} not divisible by chunk {chunk}")
+    y, _ = ssd_chunked(xin, dt, A, Bm, Cm, chunk)
+    y = y + xin * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(B, L, dd["d_in"])
+    y = _gated_norm(y, z, p["norm_scale"])
+    y = shard(y, "batch", "seq", "mlp_act")
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"])
+
+
+def init_ssm_state(batch: int, d_model: int, s: SSMConfig,
+                   dtype=jnp.float32) -> SSMState:
+    dd = mamba_dims(d_model, s)
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_width - 1, dd["conv_ch"]), dtype),
+        s=jnp.zeros((batch, dd["H"], dd["N"], dd["P"]), jnp.float32),
+    )
+
+
+def mamba2_decode(p: Dict[str, Any], d_model: int, s: SSMConfig,
+                  x: jax.Array, state: SSMState
+                  ) -> Tuple[jax.Array, SSMState]:
+    """x (B,1,d) -> (y (B,1,d), new state)."""
+    z, xin, Bm, Cm, dt, dd = _split_proj(p, x, d_model, s)
+    H, P, N, G = dd["H"], dd["P"], dd["N"], dd["G"]
+    B = x.shape[0]
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)[:, 0]      # (B,ch)
+    # conv ring step
+    buf = jnp.concatenate([state.conv, xbc[:, None, :].astype(state.conv.dtype)],
+                          axis=1)                            # (B,W,ch)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32),
+                          w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = buf[:, 1:, :]
+    xin = conv_out[:, :dd["d_in"]].reshape(B, H, P)
+    Bm = conv_out[:, dd["d_in"]:dd["d_in"] + G * N].reshape(B, G, N)
+    Cm = conv_out[:, dd["d_in"] + G * N:].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)     # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt1 * (-jnp.exp(p["A_log"])))                # (B,H)
+    u = xin.astype(jnp.float32) * dt1[..., None]             # (B,H,P)
+    s_new = (a[..., None, None] * state.s
+             + Bh[..., :, None] * u[..., None, :])           # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, s_new)
+    y = y + xin.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, 1, dd["d_in"]).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    return out, SSMState(conv=new_conv, s=s_new)

@@ -1,0 +1,382 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallel/chunked
+training form) and sLSTM (scalar memory, genuinely recurrent), plus the
+full xlstm-125m model assembly (init / forward / decode).
+
+mLSTM training uses the stabilized *parallel* form (linear attention with
+input/forget-gate decay), query-chunked for long sequences; decode is the
+O(1) recurrent update.  sLSTM has no parallel form (recurrent matrix R),
+so it scans over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamBuilder, shard
+from repro.models.layers import (apply_norm, cross_entropy_loss,
+                                 embed_tokens, init_norm, init_embedding,
+                                 logits_from_hidden)
+
+_NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B,H,hd,hd) matrix memory
+    n: jax.Array   # (B,H,hd)
+    m: jax.Array   # (B,H) stabilizer
+    conv: jax.Array  # (B,W-1,dc)
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    dc = int(cfg.d_model * x.proj_factor_mlstm)
+    H = x.num_heads
+    hd = dc // H
+    return dc, H, hd
+
+
+def init_mlstm(pb: ParamBuilder, path: str, cfg: ModelConfig) -> None:
+    x = cfg.xlstm
+    d = cfg.d_model
+    dc, H, hd = _mlstm_dims(cfg)
+    init_norm(pb, f"{path}/norm", d, cfg.norm)
+    pb.param(f"{path}/w_up", (d, 2 * dc), ("embed", "mlp"))
+    pb.param(f"{path}/conv_w", (x.conv_width, dc), (None, "mlp"))
+    pb.param(f"{path}/conv_b", (dc,), ("mlp",), init="zeros")
+    for nm in ("wq", "wk", "wv"):
+        pb.param(f"{path}/{nm}", (dc, H, hd), ("mlp", "heads", "head_dim"))
+    pb.param(f"{path}/w_i", (dc, H), ("mlp", "heads"), dtype=jnp.float32)
+    pb.param(f"{path}/w_f", (dc, H), ("mlp", "heads"), dtype=jnp.float32)
+    pb.param(f"{path}/b_i", (H,), ("heads",), init="zeros", dtype=jnp.float32)
+    pb.param(f"{path}/b_f", (H,), ("heads",), init="ones", dtype=jnp.float32)
+    pb.param(f"{path}/out_norm", (dc,), ("mlp",), init="ones")
+    pb.param(f"{path}/w_down", (dc, d), ("mlp", "embed"))
+
+
+def _conv_silu(xc, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xc)
+    for k in range(W):
+        out = out + pad[:, k:k + xc.shape[1], :] * w[k]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xc.dtype)
+
+
+def _head_groupnorm(h: jax.Array, scale: jax.Array, eps=1e-6) -> jax.Array:
+    """h (B,T,H,hd) normalized per head then flattened."""
+    h32 = h.astype(jnp.float32)
+    mu = jnp.mean(h32, axis=-1, keepdims=True)
+    var = jnp.var(h32, axis=-1, keepdims=True)
+    y = (h32 - mu) * jax.lax.rsqrt(var + eps)
+    B, T, H, hd = h.shape
+    y = y.reshape(B, T, H * hd) * scale.astype(jnp.float32)
+    return y
+
+
+def mlstm_parallel(q, k, v, logf, logi, q_chunk: int = 2048):
+    """Stabilized parallel mLSTM.
+
+    q,k,v (B,T,H,hd); logf/logi (B,T,H).  Returns h (B,T,H,hd)."""
+    B, T, H, hd = q.shape
+    cumf = jnp.cumsum(logf, axis=1)                          # (B,T,H)
+    scale = 1.0 / math.sqrt(hd)
+
+    def block(qc, q_pos, cumf_q):
+        # qc (B,c,H,hd); scores vs all keys
+        d = (cumf_q[:, :, None, :] - cumf[:, None, :, :]
+             + logi[:, None, :, :])                          # (B,c,T,H)
+        mask = q_pos[:, None] >= jnp.arange(T)[None, :]      # (c,T)
+        d = jnp.where(mask[None, :, :, None], d, _NEG_INF)
+        m = jnp.max(d, axis=2, keepdims=True)                # (B,c,1,H)
+        dexp = jnp.exp(d - m)
+        qk = jnp.einsum("bchd,bthd->bcth", qc.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+        S = qk * dexp
+        n = jnp.maximum(jnp.abs(jnp.sum(S, axis=2)),
+                        jnp.exp(-m[:, :, 0, :]))             # (B,c,H)
+        hout = jnp.einsum("bcth,bthd->bchd", S, v.astype(jnp.float32))
+        return hout / n[..., None]
+
+    if T > q_chunk and T % q_chunk == 0:
+        nch = T // q_chunk
+        qs = q.reshape(B, nch, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+        cfs = cumf.reshape(B, nch, q_chunk, H).transpose(1, 0, 2, 3)
+        pos = jnp.arange(T).reshape(nch, q_chunk)
+
+        def step(_, xs):
+            qc, cf, pp = xs
+            return None, block(qc, pp, cf)
+
+        _, outs = jax.lax.scan(step, None, (qs, cfs, pos))
+        h = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    else:
+        h = block(q, jnp.arange(T), cumf)
+    return h.astype(q.dtype)
+
+
+def apply_mlstm(p: Dict[str, Any], cfg: ModelConfig,
+                x: jax.Array) -> jax.Array:
+    dc, H, hd = _mlstm_dims(cfg)
+    r = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", r, p["w_up"])
+    xi, z = up[..., :dc], up[..., dc:]
+    xc = _conv_silu(xi, p["conv_w"], p["conv_b"])
+    q = jnp.einsum("bte,ehd->bthd", xc, p["wq"])
+    k = jnp.einsum("bte,ehd->bthd", xc, p["wk"])
+    v = jnp.einsum("bte,ehd->bthd", xi, p["wv"])
+    logi = (jnp.einsum("bte,eh->bth", xc.astype(jnp.float32), p["w_i"])
+            + p["b_i"])
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bte,eh->bth", xc.astype(jnp.float32), p["w_f"])
+        + p["b_f"])
+    h = mlstm_parallel(q, k, v, logf, logi)
+    hn = _head_groupnorm(h, p["out_norm"])
+    y = (hn * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return x + jnp.einsum("bte,ed->btd", y, p["w_down"])
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    from repro.models.common import to_dtype
+    dc, H, hd = _mlstm_dims(cfg)
+    W = cfg.xlstm.conv_width
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, W - 1, dc), to_dtype(cfg.dtype)),
+    )
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jax.Array,
+                 st: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    dc, H, hd = _mlstm_dims(cfg)
+    r = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", r, p["w_up"])
+    xi, z = up[..., :dc], up[..., dc:]
+    buf = jnp.concatenate([st.conv, xi[:, :1].astype(st.conv.dtype)], axis=1)
+    co = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xc = jax.nn.silu(co).astype(x.dtype)[:, None, :]
+    q = jnp.einsum("bte,ehd->bthd", xc, p["wq"])[:, 0].astype(jnp.float32)
+    k = jnp.einsum("bte,ehd->bthd", xc, p["wk"])[:, 0].astype(jnp.float32)
+    v = jnp.einsum("bte,ehd->bthd", xi, p["wv"])[:, 0].astype(jnp.float32)
+    logi = (jnp.einsum("be,eh->bh", xc[:, 0].astype(jnp.float32), p["w_i"])
+            + p["b_i"])
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("be,eh->bh", xc[:, 0].astype(jnp.float32), p["w_f"])
+        + p["b_f"])
+    m_new = jnp.maximum(logf + st.m, logi)
+    fg = jnp.exp(logf + st.m - m_new)
+    ig = jnp.exp(logi - m_new)
+    scale = 1.0 / math.sqrt(hd)
+    C = fg[..., None, None] * st.C + ig[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", v, k)
+    n = fg[..., None] * st.n + ig[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, q) * scale),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]                      # (B,1,H,hd)
+    hn = _head_groupnorm(h.astype(x.dtype), p["out_norm"])
+    y = (hn * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = x + jnp.einsum("bte,ed->btd", y, p["w_down"])
+    return out, MLSTMState(C=C, n=n, m=m_new, conv=buf[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B,H,hd)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array   # (B,H,hd)
+    conv: jax.Array
+
+
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.xlstm.num_heads
+    hd = cfg.d_model // H
+    return H, hd
+
+
+def init_slstm(pb: ParamBuilder, path: str, cfg: ModelConfig) -> None:
+    x = cfg.xlstm
+    d = cfg.d_model
+    H, hd = _slstm_dims(cfg)
+    pf = x.proj_factor_slstm
+    dff = int(d * pf)
+    init_norm(pb, f"{path}/norm", d, cfg.norm)
+    pb.param(f"{path}/conv_w", (x.conv_width, d), (None, "embed"))
+    pb.param(f"{path}/conv_b", (d,), ("embed",), init="zeros")
+    for g in ("i", "f", "z", "o"):
+        pb.param(f"{path}/w_{g}", (d, H, hd), ("embed", "heads", "head_dim"))
+        pb.param(f"{path}/r_{g}", (H, hd, hd), ("heads", "head_dim", None))
+        pb.param(f"{path}/b_{g}", (H, hd), ("heads", "head_dim"),
+                 init="ones" if g == "f" else "zeros", dtype=jnp.float32)
+    pb.param(f"{path}/out_norm", (d,), ("embed",), init="ones")
+    # post-block gated FFN (proj factor 4/3)
+    pb.param(f"{path}/ffn_norm", (d,), ("embed",), init="ones")
+    pb.param(f"{path}/w_up", (d, 2 * dff), ("embed", "mlp"))
+    pb.param(f"{path}/w_down", (dff, d), ("mlp", "embed"))
+
+
+def _slstm_cell(p, xt, st: SLSTMState):
+    """One sLSTM step.  xt: dict of per-gate inputs (B,H,hd)."""
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", st.h, p[f"r_{g}"])
+    zi = xt["i"] + rec("i") + p["b_i"]
+    zf = xt["f"] + rec("f") + p["b_f"]
+    zz = xt["z"] + rec("z") + p["b_z"]
+    zo = xt["o"] + rec("o") + p["b_o"]
+    m_new = jnp.maximum(zf + st.m, zi)
+    ig = jnp.exp(zi - m_new)
+    fg = jnp.exp(zf + st.m - m_new)
+    c = fg * st.c + ig * jnp.tanh(zz)
+    n = fg * st.n + ig
+    h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new, conv=st.conv)
+
+
+def apply_slstm(p: Dict[str, Any], cfg: ModelConfig,
+                x: jax.Array) -> jax.Array:
+    H, hd = _slstm_dims(cfg)
+    B, T, d = x.shape
+    r = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    xc = _conv_silu(r, p["conv_w"], p["conv_b"])
+    gates = {}
+    for g, src in (("i", xc), ("f", xc), ("z", r), ("o", r)):
+        gates[g] = jnp.einsum("btd,dhe->bthe", src,
+                              p[f"w_{g}"]).astype(jnp.float32)
+
+    st0 = SLSTMState(
+        c=jnp.zeros((B, H, hd), jnp.float32),
+        n=jnp.zeros((B, H, hd), jnp.float32),
+        h=jnp.zeros((B, H, hd), jnp.float32),
+        m=jnp.full((B, H, hd), -1e30, jnp.float32),
+        conv=jnp.zeros((B, 0, 0), jnp.float32),
+    )
+
+    def step(st, gts):
+        st2 = _slstm_cell(p, gts, st)
+        return st2, st2.h
+
+    xs = {g: gates[g].transpose(1, 0, 2, 3) for g in gates}
+    _, hs = jax.lax.scan(step, st0, xs)
+    h = hs.transpose(1, 0, 2, 3)                              # (B,T,H,hd)
+    hn = _head_groupnorm(h.astype(x.dtype), p["out_norm"]).astype(x.dtype)
+    y = x + hn
+    # gated FFN
+    rn = apply_norm({"scale": p["ffn_norm"]}, y, "rmsnorm", cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", rn, p["w_up"])
+    dff = up.shape[-1] // 2
+    gelu = jax.nn.gelu(up[..., :dff].astype(jnp.float32)).astype(x.dtype)
+    return y + jnp.einsum("bte,ed->btd", gelu * up[..., dff:], p["w_down"])
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    from repro.models.common import to_dtype
+    H, hd = _slstm_dims(cfg)
+    W = cfg.xlstm.conv_width
+    return SLSTMState(
+        c=jnp.zeros((batch, H, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        h=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H, hd), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, W - 1, cfg.d_model), to_dtype(cfg.dtype)),
+    )
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jax.Array,
+                 st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    H, hd = _slstm_dims(cfg)
+    B = x.shape[0]
+    r = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    buf = jnp.concatenate([st.conv, r[:, :1].astype(st.conv.dtype)], axis=1)
+    co = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xc = jax.nn.silu(co).astype(x.dtype)[:, None]
+    gates = {}
+    for g, src in (("i", xc), ("f", xc), ("z", r), ("o", r)):
+        gates[g] = jnp.einsum("btd,dhe->bthe", src,
+                              p[f"w_{g}"]).astype(jnp.float32)[:, 0]
+    st_in = SLSTMState(c=st.c, n=st.n, h=st.h, m=st.m, conv=st.conv)
+    st2 = _slstm_cell(p, gates, st_in)
+    hn = _head_groupnorm(st2.h[:, None].astype(x.dtype), p["out_norm"]
+                         ).astype(x.dtype)
+    y = x + hn
+    rn = apply_norm({"scale": p["ffn_norm"]}, y, "rmsnorm", cfg.norm_eps)
+    up = jnp.einsum("btd,de->bte", rn, p["w_up"])
+    dff = up.shape[-1] // 2
+    gelu = jax.nn.gelu(up[..., :dff].astype(jnp.float32)).astype(x.dtype)
+    out = y + jnp.einsum("bte,ed->btd", gelu * up[..., dff:], p["w_down"])
+    return out, SLSTMState(c=st2.c, n=st2.n, h=st2.h, m=st2.m,
+                           conv=buf[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# xlstm-125m model assembly
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig):
+    from repro.models.common import to_dtype
+    pb = ParamBuilder(rng, dtype=to_dtype(cfg.param_dtype))
+    init_embedding(pb, cfg)
+    for i in range(cfg.num_layers):
+        if i in cfg.xlstm.slstm_layers:
+            init_slstm(pb, f"blocks/{i}", cfg)
+        else:
+            init_mlstm(pb, f"blocks/{i}", cfg)
+    init_norm(pb, "final_norm", cfg.d_model, cfg.norm)
+    return pb.build()
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            extra_embeds=None, remat: str = "layer"
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = embed_tokens(params, cfg, tokens)
+    mlstm_fn = apply_mlstm if remat == "none" else jax.checkpoint(
+        apply_mlstm, static_argnums=(1,))
+    slstm_fn = apply_slstm if remat == "none" else jax.checkpoint(
+        apply_slstm, static_argnums=(1,))
+    for i in range(cfg.num_layers):
+        p = params["blocks"][str(i)]
+        if i in cfg.xlstm.slstm_layers:
+            x = slstm_fn(p, cfg, x)
+        else:
+            x = mlstm_fn(p, cfg, x)
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=None):  # states are fp32; conv follows cfg.dtype
+    cache = {}
+    for i in range(cfg.num_layers):
+        if i in cfg.xlstm.slstm_layers:
+            cache[str(i)] = init_slstm_state(cfg, batch)
+        else:
+            cache[str(i)] = init_mlstm_state(cfg, batch)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                cache, extra_embeds=None):
+    x = embed_tokens(params, cfg, tokens)
+    new_cache = {}
+    for i in range(cfg.num_layers):
+        p = params["blocks"][str(i)]
+        if i in cfg.xlstm.slstm_layers:
+            x, new_cache[str(i)] = slstm_decode(p, cfg, x, cache[str(i)])
+        else:
+            x, new_cache[str(i)] = mlstm_decode(p, cfg, x, cache[str(i)])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache

@@ -1,0 +1,6 @@
+from repro.orchestration.controller import Deployment, LearningController
+from repro.orchestration.gpo import (DeviceNode, EdgeNode, Inventory,
+                                     random_inventory)
+
+__all__ = ["Deployment", "LearningController", "DeviceNode", "EdgeNode",
+           "Inventory", "random_inventory"]

@@ -1,0 +1,93 @@
+"""The HFL-specific service orchestrator (paper §III, Fig. 1):
+
+  learning controller  — solves HFLOP, produces a deployment, monitors the
+                         pipeline and re-clusters on environment events
+  inference controller — deploys an inference service + routing agent per
+                         node, monitors serving accuracy, and triggers a
+                         new HFL task when accuracy degrades
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hflop import HFLOPInstance, HFLOPSolution, is_feasible
+from repro.core.solvers import solve_bnb, solve_heuristic
+from repro.core.topology import ClusterTopology
+from repro.orchestration.gpo import Inventory
+
+
+@dataclass
+class Deployment:
+    """The containerized deployment the GPO would realize: one aggregator
+    service per open edge, one client + inference service + routing agent
+    per participating device."""
+    topology: ClusterTopology
+    aggregator_nodes: List[int]
+    client_nodes: List[int]
+    inference_services: List[str]
+    created_at: float = field(default_factory=time.monotonic)
+
+    @classmethod
+    def from_topology(cls, topo: ClusterTopology) -> "Deployment":
+        aggs = [int(j) for j in topo.open_edges]
+        clients = [int(i) for i in np.nonzero(topo.assign >= 0)[0]]
+        services = ([f"aggregator/edge-{j}" for j in aggs]
+                    + [f"inference/edge-{j}" for j in aggs]
+                    + [f"client/device-{i}" for i in clients]
+                    + [f"routing-agent/device-{i}" for i in clients]
+                    + ["aggregator/global", "inference/global"])
+        return cls(topology=topo, aggregator_nodes=aggs,
+                   client_nodes=clients, inference_services=services)
+
+
+@dataclass
+class LearningController:
+    inventory: Inventory
+    l: int = 2
+    T: Optional[int] = None
+    exact: bool = False              # exact B&B vs heuristic clustering
+    accuracy_threshold: float = 0.06 # MSE above this triggers retraining
+    deployment: Optional[Deployment] = None
+    solution: Optional[HFLOPSolution] = None
+    recluster_count: int = 0
+
+    def cluster(self) -> ClusterTopology:
+        inst = self.inventory.to_instance(l=self.l, T=self.T)
+        sol = solve_bnb(inst) if self.exact else solve_heuristic(inst)
+        if not is_feasible(inst, sol.assign):
+            raise RuntimeError("clustering produced infeasible topology")
+        self.solution = sol
+        return ClusterTopology.from_solution(inst, sol)
+
+    def deploy(self) -> Deployment:
+        topo = self.cluster()
+        self.deployment = Deployment.from_topology(topo)
+        return self.deployment
+
+    # -- reactions to environment / service events (paper §III last para) --
+
+    def on_node_failure(self, edge_id: int) -> Deployment:
+        """An edge host died: drop it from the inventory and re-cluster."""
+        self.inventory.edges = [e for e in self.inventory.edges
+                                if e.id != edge_id]
+        for k, e in enumerate(self.inventory.edges):
+            e.id = k
+        for d in self.inventory.devices:
+            if d.lan_edge is not None and d.lan_edge >= len(
+                    self.inventory.edges):
+                d.lan_edge = None
+        self.recluster_count += 1
+        return self.deploy()
+
+    def on_capacity_change(self, edge_id: int, new_rps: float) -> Deployment:
+        self.inventory.edges[edge_id].capacity_rps = new_rps
+        self.recluster_count += 1
+        return self.deploy()
+
+    def on_accuracy_alarm(self, mse: float) -> bool:
+        """Inference controller hook: True -> trigger a new HFL task."""
+        return mse > self.accuracy_threshold

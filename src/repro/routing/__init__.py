@@ -1,0 +1,7 @@
+from repro.routing.latency import LatencyModel
+from repro.routing.rules import EdgeState, RouteDecision, route_request
+from repro.routing.simulator import (RequestLog, SimConfig, compare_methods,
+                                     simulate)
+
+__all__ = ["LatencyModel", "EdgeState", "RouteDecision", "route_request",
+           "RequestLog", "SimConfig", "compare_methods", "simulate"]

@@ -1,0 +1,40 @@
+"""Latency model for inference serving (paper §V-C1).
+
+The paper measured HTTP round-trip times: cloud 50-100 ms, edge 8-10 ms.
+Processing time is the model's inference time, scaled per serving tier:
+Fig. 8 sweeps a "theoretical speedup of up to 95%" of cloud vs edge
+compute, i.e. cloud_infer = edge_infer * (1 - speedup)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    edge_rtt_ms: tuple = (8.0, 10.0)       # uniform, paper §V-C1
+    cloud_rtt_ms: tuple = (50.0, 100.0)    # uniform, paper §V-C1
+    device_rtt_ms: tuple = (0.0, 0.0)      # on-device serving: no network
+    base_infer_ms: float = 2.0             # GRU forward on an edge host
+    cloud_speedup: float = 0.0             # Fig. 8: 0..0.95
+    device_slowdown: float = 2.0           # devices slower than edge hosts
+
+    def rtt(self, tier: str, rng: np.random.Generator,
+            size=None) -> np.ndarray:
+        lo, hi = {"device": self.device_rtt_ms,
+                  "edge": self.edge_rtt_ms,
+                  "cloud": self.cloud_rtt_ms}[tier]
+        return rng.uniform(lo, hi, size)
+
+    def infer_ms(self, tier: str) -> float:
+        if tier == "cloud":
+            return self.base_infer_ms * (1.0 - self.cloud_speedup)
+        if tier == "device":
+            return self.base_infer_ms * self.device_slowdown
+        return self.base_infer_ms
+
+    def forward_hop_ms(self, rng: np.random.Generator) -> float:
+        """Edge->cloud forwarding hop (R3 overflow): the request pays the
+        edge leg plus the cloud leg."""
+        return float(self.rtt("cloud", rng))

@@ -1,0 +1,126 @@
+"""Discrete-event simulator for inference serving during (continual) HFL
+training — reproduces the paper's Fig. 7 (response times) and Fig. 8
+(end-to-end latency vs compute speedup and request-rate scaling).
+
+Each device emits a Poisson request stream at rate lambda_i.  Requests are
+routed by rules R1-R3 (``repro.routing.rules``); edges have finite
+concurrent-processing capacity derived from r_j; the cloud is infinite.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.topology import ClusterTopology
+from repro.routing.latency import LatencyModel
+from repro.routing.rules import EdgeState, RouteDecision, route_request
+
+
+@dataclass
+class RequestLog:
+    t: np.ndarray                    # arrival times (s)
+    device: np.ndarray
+    tier: np.ndarray                 # 0=device 1=edge 2=cloud
+    rule: List[str]
+    latency_ms: np.ndarray
+
+    def mean_latency(self) -> float:
+        return float(np.mean(self.latency_ms))
+
+    def std_latency(self) -> float:
+        return float(np.std(self.latency_ms))
+
+    def tier_fractions(self) -> Dict[str, float]:
+        names = {0: "device", 1: "edge", 2: "cloud"}
+        out = {}
+        for k, name in names.items():
+            out[name] = float(np.mean(self.tier == k))
+        return out
+
+
+@dataclass
+class SimConfig:
+    duration_s: float = 300.0
+    seed: int = 0
+    busy_fraction: float = 1.0       # fraction of time devices train (CL: 1)
+    rate_scale: float = 1.0          # Fig. 8b: lambda x 10
+    latency: LatencyModel = field(default_factory=LatencyModel)
+
+
+def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:
+    rng = np.random.default_rng(cfg.seed)
+    lat = cfg.latency
+    n = topo.n_devices
+    rates = topo.lam * cfg.rate_scale
+
+    edges: Dict[int, EdgeState] = {}
+    for j in topo.open_edges:
+        # capacity is a property of the edge host — it does NOT scale with
+        # the request-rate multiplier (that is the point of Fig. 8b)
+        edges[int(j)] = EdgeState(capacity_rps=float(topo.r[j])
+                                  if topo.r.size else np.inf)
+
+    # generate arrivals
+    arrivals = []
+    for i in range(n):
+        if rates[i] <= 0:
+            continue
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rates[i])
+            if t > cfg.duration_s:
+                break
+            arrivals.append((t, i))
+    arrivals.sort()
+
+    # event heap for service completions: (time, edge_id)
+    completions: List = []
+    out_t, out_dev, out_tier, out_rule, out_lat = [], [], [], [], []
+    tier_code = {"device": 0, "edge": 1, "cloud": 2}
+
+    for (t, i) in arrivals:
+        while completions and completions[0][0] <= t:
+            _, j = heapq.heappop(completions)
+            edges[j].in_service -= 1
+        busy = rng.uniform() < cfg.busy_fraction
+        dec = route_request(i, busy, topo.assign, edges, now=t)
+        service = lat.infer_ms(dec.tier)
+        if dec.tier == "edge":
+            edges[dec.edge].admit(t)
+            heapq.heappush(completions, (t + service / 1000.0, dec.edge))
+            net = float(lat.rtt("edge", rng))
+        elif dec.tier == "cloud":
+            net = float(lat.rtt("cloud", rng))
+            if dec.hops == 2:        # forwarded via the edge (R3 overflow)
+                net += float(lat.rtt("edge", rng))
+        else:
+            net = float(lat.rtt("device", rng))
+        out_t.append(t)
+        out_dev.append(i)
+        out_tier.append(tier_code[dec.tier])
+        out_rule.append(dec.rule)
+        out_lat.append(net + service)
+
+    return RequestLog(
+        t=np.asarray(out_t), device=np.asarray(out_dev, int),
+        tier=np.asarray(out_tier, int), rule=out_rule,
+        latency_ms=np.asarray(out_lat))
+
+
+def compare_methods(inst, assigns: Dict[str, np.ndarray], cfg: SimConfig,
+                    ) -> Dict[str, RequestLog]:
+    """Run the same workload through several topologies (Fig. 7 setup:
+    flat vs location-hierarchical vs HFLOP)."""
+    out = {}
+    for name, assign in assigns.items():
+        if assign is None:           # flat FL
+            topo = ClusterTopology.flat(inst.n, lam=inst.lam)
+        else:
+            topo = ClusterTopology(assign=np.asarray(assign),
+                                   n_devices=inst.n, n_edges=inst.m,
+                                   lam=inst.lam, r=inst.r, l=inst.l)
+        out[name] = simulate(topo, cfg)
+    return out

@@ -1,0 +1,6 @@
+from repro.serving.engine import ServeEngine
+from repro.serving.workload import (RequestEvent, batched_arrivals,
+                                    poisson_requests)
+
+__all__ = ["ServeEngine", "RequestEvent", "batched_arrivals",
+           "poisson_requests"]

@@ -1,0 +1,51 @@
+"""Serving engine: jitted prefill / decode steps over the unified model
+API, with greedy sampling.  ``decode_step`` is the program lowered by the
+``decode_32k`` / ``long_500k`` dry-run shapes."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ModelApi, make_model
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Any,
+                 batch_size: int, max_len: Optional[int] = None):
+        self.cfg = cfg
+        self.api = make_model(cfg)
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len or cfg.run.max_cache_len
+        self.cache = self.api.init_cache(batch_size, self.max_len)
+        self.pos = jnp.zeros((), jnp.int32)
+        self._decode = jax.jit(self._decode_impl)
+
+    def _decode_impl(self, params, tokens, pos, cache):
+        logits, cache = self.api.decode_step(params, tokens, pos, cache)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    def step(self, tokens: jax.Array) -> jax.Array:
+        """tokens (B,1) -> next token ids (B,)."""
+        next_tok, self.cache = self._decode(self.params, tokens, self.pos,
+                                            self.cache)
+        self.pos = self.pos + 1
+        return next_tok
+
+    def generate(self, prompt_tokens: jax.Array, steps: int) -> jax.Array:
+        """Greedy generation: feeds the prompt token-by-token then samples
+        ``steps`` continuations.  Returns (B, steps)."""
+        B, S = prompt_tokens.shape
+        out = []
+        tok = None
+        for s in range(S):
+            tok = self.step(prompt_tokens[:, s:s + 1])
+        for _ in range(steps):
+            out.append(tok)
+            tok = self.step(tok[:, None])
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,48 @@
+"""Inference workload generation: per-device Poisson streams (rate
+lambda_i) aggregated into serving batches — the bridge between the
+paper's request model and the TPU decode step."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class RequestEvent:
+    t: float
+    device: int
+
+
+def poisson_requests(lam: np.ndarray, duration_s: float,
+                     seed: int = 0) -> List[RequestEvent]:
+    rng = np.random.default_rng(seed)
+    events: List[RequestEvent] = []
+    for i, rate in enumerate(np.asarray(lam)):
+        if rate <= 0:
+            continue
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t > duration_s:
+                break
+            events.append(RequestEvent(t=t, device=i))
+    events.sort(key=lambda e: e.t)
+    return events
+
+
+def batched_arrivals(events: List[RequestEvent], batch_size: int,
+                     max_wait_s: float = 0.05
+                     ) -> Iterator[Tuple[float, np.ndarray]]:
+    """Continuous batching: emit a batch when it is full or the oldest
+    request has waited ``max_wait_s``."""
+    cur: List[RequestEvent] = []
+    for ev in events:
+        cur.append(ev)
+        if len(cur) >= batch_size or (cur and
+                                      ev.t - cur[0].t >= max_wait_s):
+            yield ev.t, np.asarray([e.device for e in cur])
+            cur = []
+    if cur:
+        yield cur[-1].t, np.asarray([e.device for e in cur])

@@ -1,0 +1,6 @@
+from repro.training.optimizer import SGD, AdamW, AdamWState, SGDState
+from repro.training.train_step import (hfl_global_round, make_eval_step,
+                                       make_hfl_train_step, make_train_step)
+
+__all__ = ["SGD", "AdamW", "AdamWState", "SGDState", "hfl_global_round",
+           "make_eval_step", "make_hfl_train_step", "make_train_step"]

@@ -1,0 +1,100 @@
+"""Optimizers as pure pytree transforms (no optax in the container).
+
+AdamW with configurable state dtype (llama3-405b runs bf16 moments to fit
+HBM — DESIGN.md §5) and SGD+momentum for FL client steps (the paper's
+clients run plain gradient descent locally)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+    def _sched(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        return self.lr * warm
+
+    def init(self, params: PyTree) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        lr = self._sched(step)
+        b1, b2 = self.b1, self.b2
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m2 / (1 - b1 ** step)
+            vhat = v2 / (1 - b2 ** step)
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * delta
+            return p2.astype(p.dtype), m2.astype(dt), v2.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Optional[PyTree]
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-4
+    momentum: float = 0.0
+
+    def init(self, params: PyTree) -> SGDState:
+        mom = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+               if self.momentum else None)
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(self, grads: PyTree, state: SGDState, params: PyTree
+               ) -> Tuple[PyTree, SGDState]:
+        if self.momentum:
+            mom = jax.tree.map(
+                lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                state.momentum, grads)
+            step_dir = mom
+        else:
+            mom = None
+            step_dir = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - self.lr * d
+                          ).astype(p.dtype), params, step_dir)
+        return new_params, SGDState(step=state.step + 1, momentum=mom)

@@ -1,0 +1,84 @@
+"""Train-step assembly: loss + grad + microbatched accumulation +
+optimizer update, over the unified model API.
+
+``make_train_step`` builds the jittable function lowered by the train_4k
+dry-run shape.  ``make_hfl_train_step`` builds the hierarchical-FL
+variant: parameters carry a leading *cluster* dimension (sharded over the
+"pod" mesh axis) and gradients are vmapped per cluster, so local rounds
+emit no cross-cluster collectives; ``global_sync`` (fl.collectives) is a
+separate program run every l rounds."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.fl.collectives import global_sync
+from repro.models import ModelApi
+from repro.training.optimizer import AdamW
+
+PyTree = Any
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], k: int):
+    def sp(x):
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+    return {key: sp(v) for key, v in batch.items()}
+
+
+def make_train_step(api: ModelApi, cfg: ArchConfig, optimizer: AdamW
+                    ) -> Callable:
+    k = cfg.run.microbatches
+
+    def train_step(params: PyTree, opt_state, batch: Dict[str, jax.Array]):
+        if k <= 1:
+            loss, grads = jax.value_and_grad(api.loss)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, k)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(api.loss)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_eval_step(api: ModelApi) -> Callable:
+    def eval_step(params, batch):
+        return api.loss(params, batch)
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# hierarchical-FL train step (cluster-replicated params)
+# ---------------------------------------------------------------------------
+
+def make_hfl_train_step(api: ModelApi, cfg: ArchConfig, optimizer: AdamW
+                        ) -> Callable:
+    """params/opt_state carry a leading cluster dim; batch carries a
+    matching leading dim.  Local training = vmap over clusters (no
+    cross-cluster reduction)."""
+    base = make_train_step(api, cfg, optimizer)
+
+    def hfl_local_step(stacked_params, stacked_opt, stacked_batch):
+        return jax.vmap(base)(stacked_params, stacked_opt, stacked_batch)
+
+    return hfl_local_step
+
+
+def hfl_global_round(stacked_params: PyTree,
+                     weights=None) -> PyTree:
+    """The every-l-rounds parameter sync (one "pod"-axis all-reduce)."""
+    return global_sync(stacked_params, weights)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benchmarks must see 1 device (the 512-device flag belongs
+# to repro.launch.dryrun only).  Multi-device collective tests spawn
+# subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

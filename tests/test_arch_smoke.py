@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch in a
+REDUCED variant of the same family runs one forward + one train step on
+CPU with correct output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, applicable_shapes, get_config
+from repro.configs.registry import ASSIGNED
+from repro.models import make_model
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+SEQ = 32
+BATCH = 2
+
+
+def _batch_for(cfg, rng, B=BATCH, S=SEQ):
+    m = cfg.model
+    if m.family == "rnn":
+        return {"windows": jnp.asarray(rng.normal(size=(B, 12, 1)),
+                                       jnp.float32),
+                "targets": jnp.asarray(rng.normal(size=(B, 1)), jnp.float32)}
+    b = {"tokens": jnp.asarray(rng.integers(0, m.vocab_size, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, m.vocab_size, (B, S)),
+                               jnp.int32)}
+    if m.family == "vlm":
+        b["patches"] = jnp.asarray(
+            rng.normal(size=(B, m.frontend.num_positions, m.d_model)) * .02,
+            jnp.bfloat16)
+    if m.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(B, m.frontend.num_positions, m.d_model)) * .02,
+            jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED) + ["gru-traffic"])
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.model.d_model <= 512
+    if cfg.model.family != "rnn":
+        assert cfg.model.num_layers == 2
+    if cfg.model.moe:
+        assert cfg.model.moe.num_experts <= 4
+    api = make_model(cfg)
+    rng = np.random.default_rng(0)
+    params, axes = api.init_params(jax.random.key(0))
+    batch = _batch_for(cfg, rng)
+    # forward shapes
+    if cfg.model.family != "rnn":
+        logits, aux = api.forward(params, batch)
+        S_total = batch["tokens"].shape[1]
+        if cfg.model.family == "vlm":
+            S_total += batch["patches"].shape[1]
+        assert logits.shape == (BATCH, S_total, cfg.model.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # one train step
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(api, cfg, opt))
+    opt_state = opt.init(params)
+    new_params, _, loss = step(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    # params actually changed
+    changed = jax.tree.map(
+        lambda a, b: bool(np.any(np.asarray(a, np.float32)
+                                 != np.asarray(b, np.float32))),
+        params, new_params)
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    api = make_model(cfg)
+    rng = np.random.default_rng(1)
+    params, _ = api.init_params(jax.random.key(1))
+    cache = api.init_cache(BATCH, 64)
+    tok = jnp.asarray(rng.integers(0, cfg.model.vocab_size, (BATCH, 1)),
+                      jnp.int32)
+    logits, cache2 = api.decode_step(params, tok, jnp.int32(0), cache)
+    assert logits.shape == (BATCH, 1, cfg.model.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # second step with updated cache
+    logits2, _ = api.decode_step(params, tok, jnp.int32(1), cache2)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_long_context_applicability_table():
+    """DESIGN.md §4 skip table is encoded in the configs."""
+    expect_long = {"zamba2-1.2b", "xlstm-125m", "h2o-danube-1.8b",
+                   "gemma3-1b"}
+    for name, cfg in all_configs().items():
+        shapes = {s.name for s in applicable_shapes(cfg)}
+        assert ("long_500k" in shapes) == (name in expect_long), name
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes

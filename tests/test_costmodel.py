@@ -1,0 +1,50 @@
+"""Communication-cost accounting vs the paper's §V-D absolute numbers."""
+import numpy as np
+import pytest
+
+from repro.core import (GRU_MODEL_BYTES, HFLOPInstance, flat_fl_cost,
+                        hfl_cost, savings_vs_flat)
+
+
+def _usecase_instance(n=20, m=4):
+    """The paper's clustered topology: every device has a zero-cost edge."""
+    c_d = np.ones((n, m))
+    assign = np.repeat(np.arange(m), n // m)
+    c_d[np.arange(n), assign] = 0.0
+    return HFLOPInstance(c_d, c_e=np.ones(m), lam=np.ones(n),
+                         r=np.full(m, np.inf), l=2), assign
+
+
+def test_flat_fl_matches_paper():
+    """Paper: ~2.37 GB for flat FL (20 devices, 100 rounds, 594 KB)."""
+    rep = flat_fl_cost(20, 100)
+    assert rep.gigabytes == pytest.approx(2.376, abs=0.01)
+
+
+def test_uncapacitated_matches_paper():
+    """Paper: ~0.24 GB when every device sits on its free edge (only the
+    4 edge->cloud links are metered, 50 global rounds)."""
+    inst, assign = _usecase_instance()
+    rep = hfl_cost(inst, assign, total_rounds=100)
+    assert rep.n_global_rounds == 50
+    assert rep.gigabytes == pytest.approx(0.2376, abs=0.005)
+
+
+def test_capacitated_between_bounds():
+    """With finite capacities forcing ~2-3 devices to non-free edges, the
+    volume lands between the uncapacitated bound and flat FL (paper's
+    0.53 GB point)."""
+    inst, assign = _usecase_instance()
+    # force 3 devices onto metered edges (capacity spillover)
+    spilled = assign.copy()
+    spilled[:3] = (spilled[:3] + 1) % 4
+    rep = hfl_cost(inst, spilled, total_rounds=100)
+    assert 0.2376 < rep.gigabytes < 2.376
+    assert rep.gigabytes == pytest.approx(0.2376 + 3 * 100 * 2
+                                          * GRU_MODEL_BYTES / 1e9, rel=1e-6)
+
+
+def test_savings_positive_and_ordered():
+    inst, assign = _usecase_instance()
+    s = savings_vs_flat(inst, assign, 100)
+    assert s == pytest.approx(90.0, abs=1.0)   # 0.2376 vs 2.376 -> 90%

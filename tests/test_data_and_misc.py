@@ -1,0 +1,92 @@
+"""Traffic data generator, checkpoint roundtrip, orchestration controller,
+serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.data.traffic import (continual_split, generate, select_fl_sensors,
+                                windows_for_sensor)
+from repro.models import make_model
+from repro.orchestration import LearningController, random_inventory
+from repro.serving import ServeEngine, batched_arrivals, poisson_requests
+
+
+def test_traffic_dataset_statistics():
+    ds = generate(num_days=7, n_sensors=50, seed=0)
+    assert ds.speeds.shape == (7 * 288, 50)
+    assert 3.0 <= ds.speeds.min() and ds.speeds.max() <= 75.0
+    assert len(np.unique(ds.cluster_of)) == 4
+    # rush hour slower than night, on average
+    tod = np.arange(ds.num_steps) % 288
+    rush = ds.speeds[(tod > 85) & (tod < 95)].mean()
+    night = ds.speeds[tod < 40].mean()
+    assert rush < night - 3.0
+
+
+def test_windows_and_split():
+    ds = generate(num_days=40, n_sensors=40, seed=1)
+    tr, va = continual_split(ds, round_idx=3)
+    X, y = windows_for_sensor(ds, 0, tr.start, tr.stop, history=12)
+    assert X.shape[1:] == (12, 1) and y.shape[1:] == (1,)
+    # next-step target: y equals the value following the window
+    z = ds.normalized()[tr.start:tr.stop, 0]
+    np.testing.assert_allclose(X[5, :, 0], z[5:17], rtol=1e-6)
+    np.testing.assert_allclose(y[5, 0], z[17], rtol=1e-6)
+    sensors = select_fl_sensors(ds, per_cluster=2, seed=0)
+    assert len(sensors) == 8
+    assert len(np.unique(ds.cluster_of[sensors])) == 4
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+            "c": jnp.asarray([1, 2, 3], jnp.int32)}
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = load_pytree(p, like)
+    np.testing.assert_allclose(np.asarray(back["a"]["b"]),
+                               np.asarray(tree["a"]["b"]))
+    assert back["c"].dtype == jnp.int32
+
+
+def test_controller_deploy_and_recluster():
+    # generous capacity slack so losing one of three edges stays feasible
+    inv = random_inventory(n=12, m=3, seed=0, capacity_slack=3.0)
+    ctl = LearningController(inventory=inv, l=2)
+    dep = ctl.deploy()
+    topo = dep.topology
+    assert topo.participant_count() == 12
+    assert len(dep.aggregator_nodes) >= 1
+    assert any(s.startswith("routing-agent/") for s in dep.inference_services)
+    # edge failure triggers re-clustering onto remaining edges
+    dep2 = ctl.on_node_failure(dep.aggregator_nodes[0])
+    assert ctl.recluster_count == 1
+    assert dep2.topology.participant_count() == 12
+    assert ctl.on_accuracy_alarm(0.10) is True
+    assert ctl.on_accuracy_alarm(0.01) is False
+
+
+def test_serve_engine_generate():
+    cfg = get_config("xlstm-125m").reduced()
+    api = make_model(cfg)
+    params, _ = api.init_params(jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    prompt = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out = eng.generate(prompt, steps=4)
+    assert out.shape == (2, 4)
+    assert (np.asarray(out) >= 0).all()
+
+
+def test_workload_generator():
+    lam = np.array([5.0, 0.0, 10.0])
+    ev = poisson_requests(lam, duration_s=20, seed=0)
+    devs = np.asarray([e.device for e in ev])
+    assert (devs != 1).all()
+    assert abs((devs == 2).sum() / max((devs == 0).sum(), 1) - 2.0) < 0.5
+    batches = list(batched_arrivals(ev, batch_size=8))
+    assert sum(len(b[1]) for b in batches) == len(ev)

@@ -1,0 +1,108 @@
+"""HFLOP problem + solver correctness (paper §IV)."""
+import numpy as np
+import pytest
+
+from repro.core import (HFLOPInstance, build_ilp, is_feasible, objective,
+                        paper_cost_instance, random_instance, solve_bnb,
+                        solve_bruteforce, solve_greedy, solve_heuristic,
+                        solve_uncapacitated, violations)
+
+
+def test_instance_shapes():
+    inst = random_instance(5, 3, seed=0)
+    assert inst.n == 5 and inst.m == 3
+    assert inst.T == 5
+
+
+def test_objective_matches_manual():
+    inst = HFLOPInstance(
+        c_d=np.array([[0.0, 1.0], [1.0, 0.0]]),
+        c_e=np.array([2.0, 3.0]), lam=np.ones(2), r=np.full(2, 10.0), l=2)
+    assign = np.array([0, 1])
+    # local: (0 + 0) * l=2 ; edges 0,1 open: 2 + 3
+    assert objective(inst, assign) == pytest.approx(5.0)
+    assign2 = np.array([0, 0])
+    assert objective(inst, assign2) == pytest.approx(1.0 * 2 + 2.0)
+
+
+def test_capacity_violation_detected():
+    inst = HFLOPInstance(c_d=np.zeros((3, 1)), c_e=np.ones(1),
+                         lam=np.array([1.0, 1.0, 1.0]),
+                         r=np.array([2.0]), l=1, T=2)
+    assert violations(inst, np.array([0, 0, 0]))
+    assert not violations(inst, np.array([0, 0, -1]))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_bnb_matches_bruteforce(seed):
+    T = None if seed % 2 == 0 else 4
+    inst = random_instance(n=6, m=3, seed=seed, T=T)
+    bf = solve_bruteforce(inst)
+    bb = solve_bnb(inst)
+    assert bb.optimal
+    assert bb.cost == pytest.approx(bf.cost, abs=1e-6)
+    assert is_feasible(inst, bb.assign)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_heuristic_feasible_and_bounded(seed):
+    inst = random_instance(n=25, m=5, seed=seed)
+    h = solve_heuristic(inst)
+    assert is_feasible(inst, h.assign)
+    g = solve_greedy(inst)
+    assert h.cost <= g.cost + 1e-9          # local search only improves
+
+
+def test_tight_capacity_exact():
+    for seed in range(4):
+        inst = random_instance(n=7, m=3, seed=100 + seed, T=5,
+                               capacity_slack=1.05)
+        bf = solve_bruteforce(inst)
+        bb = solve_bnb(inst)
+        assert bb.cost == pytest.approx(bf.cost, abs=1e-6)
+
+
+def test_uncapacitated_lower_bound():
+    """Fig. 9: the uncapacitated variant is a cost lower bound."""
+    for seed in range(5):
+        inst = paper_cost_instance(30, 5, seed=seed, capacity_slack=1.2)
+        cap = solve_heuristic(inst)
+        uncap = solve_uncapacitated(inst)
+        assert uncap.cost <= cap.cost + 1e-9
+
+
+def test_capacity_monotonicity():
+    """Raising every r_j can never increase the optimal cost."""
+    inst = random_instance(n=6, m=3, seed=3, capacity_slack=1.1)
+    base = solve_bnb(inst).cost
+    bigger = HFLOPInstance(inst.c_d, inst.c_e, inst.lam, inst.r * 2.0,
+                           l=inst.l, T=inst.T)
+    assert solve_bnb(bigger).cost <= base + 1e-9
+
+
+def test_cflp_reduction():
+    """Any CFLP instance maps to HFLOP with T=n (paper §IV-B remark)."""
+    rng = np.random.default_rng(0)
+    setup = rng.uniform(1, 2, 3)           # facility open costs
+    transport = rng.uniform(0, 1, (6, 3))
+    demand = rng.uniform(0.1, 0.5, 6)
+    cap = np.full(3, demand.sum())
+    inst = HFLOPInstance(c_d=transport, c_e=setup, lam=demand, r=cap,
+                         l=1, T=6)
+    sol = solve_bnb(inst)
+    assert sol.optimal
+    assert int(np.sum(sol.assign >= 0)) == 6   # all demand covered
+
+
+def test_ilp_encoding_consistency():
+    inst = random_instance(6, 3, seed=1, T=4)
+    ilp = build_ilp(inst)
+    bf = solve_bruteforce(inst)
+    v = np.zeros(ilp.c.shape[0])
+    for i, j in enumerate(bf.assign):
+        if j >= 0:
+            v[ilp.x_index(i, j)] = 1
+    for j in np.unique(bf.assign[bf.assign >= 0]):
+        v[ilp.y_index(j)] = 1
+    assert np.all(ilp.A @ v <= ilp.b + 1e-9)
+    assert ilp.c @ v == pytest.approx(bf.cost)

@@ -1,0 +1,77 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HFLOPInstance, is_feasible, objective,
+                        solve_bruteforce, solve_greedy, solve_heuristic)
+from repro.fl.compression import dequantize_int8, quantize_int8
+import jax.numpy as jnp
+
+
+@st.composite
+def instances(draw, max_n=7, max_m=3):
+    n = draw(st.integers(2, max_n))
+    m = draw(st.integers(1, max_m))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    c_d = rng.uniform(0, 1, (n, m))
+    c_e = rng.uniform(0.1, 2, m)
+    lam = rng.uniform(0.1, 1, n)
+    slack = draw(st.floats(1.05, 3.0))
+    raw = rng.uniform(0.5, 1.5, m)
+    r = raw / raw.sum() * lam.sum() * slack
+    T = draw(st.one_of(st.none(), st.integers(1, n)))
+    return HFLOPInstance(c_d, c_e, lam, r, l=draw(st.integers(1, 4)), T=T)
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_heuristic_always_feasible_or_inf(inst):
+    sol = solve_heuristic(inst)
+    if np.isfinite(sol.cost):
+        assert is_feasible(inst, sol.assign)
+        assert sol.cost == objective(inst, sol.assign)
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances(max_n=6, max_m=2))
+def test_heuristic_never_beats_bruteforce(inst):
+    bf = solve_bruteforce(inst)
+    h = solve_heuristic(inst)
+    if np.isfinite(bf.cost) and np.isfinite(h.cost):
+        assert h.cost >= bf.cost - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_objective_scale_invariance(inst):
+    """Scaling all costs by a>0 scales the optimum by a."""
+    h = solve_greedy(inst)
+    if not np.isfinite(h.cost):
+        return
+    scaled = HFLOPInstance(inst.c_d * 3.0, inst.c_e * 3.0, inst.lam,
+                           inst.r, l=inst.l, T=inst.T)
+    assert objective(scaled, h.assign) == (
+        3.0 * objective(inst, h.assign)) or True
+    np.testing.assert_allclose(objective(scaled, h.assign),
+                               3.0 * objective(inst, h.assign), rtol=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_quantize_error_bound(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+    assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 20), st.integers(1, 4))
+def test_costmodel_monotonic_in_rounds(seed, n, m):
+    from repro.core import flat_fl_cost
+    a = flat_fl_cost(n, 10)
+    b = flat_fl_cost(n, 20)
+    assert b.metered_bytes == 2 * a.metered_bytes

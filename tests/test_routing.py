@@ -1,0 +1,84 @@
+"""Inference routing rules R1-R3 + event simulator invariants (§III/V-C)."""
+import numpy as np
+import pytest
+
+from repro.core import HFLOPInstance
+from repro.core.topology import ClusterTopology
+from repro.routing import (EdgeState, LatencyModel, SimConfig,
+                           compare_methods, route_request, simulate)
+
+
+def _edges(cap=10.0, n=2):
+    return {j: EdgeState(capacity_rps=cap) for j in range(n)}
+
+
+def test_r1_busy_device_offloads_to_aggregator():
+    dec = route_request(0, True, np.array([1]), _edges())
+    assert dec.tier == "edge" and dec.edge == 1 and dec.rule == "R1"
+
+
+def test_r1_flat_goes_to_cloud():
+    dec = route_request(0, True, np.array([-1]), _edges())
+    assert dec.tier == "cloud" and dec.rule == "R1-flat"
+
+
+def test_r2_idle_device_serves_locally():
+    dec = route_request(0, False, np.array([1]), _edges())
+    assert dec.tier == "device" and dec.rule == "R2-local"
+
+
+def test_r3_overflow_forwards_to_cloud():
+    edges = _edges()
+    edges[1].tokens = 0.5              # bucket exhausted (at capacity)
+    dec = route_request(0, True, np.array([1]), edges)
+    assert dec.tier == "cloud" and dec.rule == "R3-overflow"
+    assert dec.hops == 2               # pays edge + cloud legs
+
+
+def _topo(n=12, m=3, cap=6.0):
+    assign = np.arange(n) % m
+    return ClusterTopology(assign=assign, n_devices=n, n_edges=m,
+                           lam=np.full(n, 2.0), r=np.full(m, cap), l=2)
+
+
+def test_simulator_no_request_lost():
+    topo = _topo()
+    log = simulate(topo, SimConfig(duration_s=30, seed=1))
+    assert len(log.latency_ms) == len(log.t) == len(log.device)
+    assert np.all(log.latency_ms > 0)
+    assert len(log.t) > 100            # Poisson with 24 req/s over 30s
+
+
+def test_simulator_latency_ordering_flat_vs_hier():
+    """Fig. 7: flat >> hierarchical latency."""
+    n, m = 20, 4
+    rng = np.random.default_rng(0)
+    c_d = np.ones((n, m))
+    loc = np.repeat(np.arange(m), 5)
+    c_d[np.arange(n), loc] = 0.0
+    inst = HFLOPInstance(c_d, np.ones(m), rng.uniform(2, 6, n),
+                         np.full(m, 30.0), l=2)
+    logs = compare_methods(inst, {"flat": None, "hier": loc},
+                           SimConfig(duration_s=60, seed=2))
+    assert logs["flat"].mean_latency() > 3 * logs["hier"].mean_latency()
+    assert logs["flat"].tier_fractions()["cloud"] == pytest.approx(1.0)
+
+
+def test_edge_tier_fraction_respects_capacity():
+    """Tighter capacity -> more cloud overflow."""
+    big = simulate(_topo(cap=50.0), SimConfig(duration_s=40, seed=3))
+    small = simulate(_topo(cap=2.0), SimConfig(duration_s=40, seed=3))
+    assert (small.tier_fractions()["cloud"]
+            > big.tier_fractions()["cloud"])
+
+
+def test_latency_model_ranges():
+    lat = LatencyModel()
+    rng = np.random.default_rng(0)
+    edge = lat.rtt("edge", rng, 1000)
+    cloud = lat.rtt("cloud", rng, 1000)
+    assert edge.min() >= 8.0 and edge.max() <= 10.0        # paper §V-C1
+    assert cloud.min() >= 50.0 and cloud.max() <= 100.0
+    assert lat.infer_ms("cloud") == pytest.approx(lat.base_infer_ms)
+    lat2 = LatencyModel(cloud_speedup=0.5)
+    assert lat2.infer_ms("cloud") == pytest.approx(lat.base_infer_ms / 2)

@@ -1,0 +1,75 @@
+"""End-to-end behaviour: the full paper pipeline — inventory -> HFLOP
+clustering -> deployment -> continual HFL training -> inference routing ->
+communication-cost accounting — produces a coherent, paper-consistent
+result on a small instance."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hfl_cost, flat_fl_cost, is_feasible
+from repro.core.topology import ClusterTopology
+from repro.data.traffic import generate, select_fl_sensors
+from repro.fl.hierarchy import ContinualHFL, HFLRunConfig
+from repro.orchestration import (DeviceNode, EdgeNode, Inventory,
+                                 LearningController)
+from repro.routing import SimConfig, compare_methods
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    # 21d train + 7d val + 4 rounds x 36-step shift needs >28 days
+    ds = generate(num_days=31, n_sensors=40, seed=0)
+    sensors = select_fl_sensors(ds, per_cluster=2, seed=0)   # 8 clients
+    n, m = len(sensors), 4
+    rng = np.random.default_rng(0)
+    lam = rng.uniform(2.0, 6.0, n)
+    devices = [DeviceNode(i, lam=float(lam[i]),
+                          lan_edge=int(ds.cluster_of[sensors[i]]))
+               for i in range(n)]
+    edges = [EdgeNode(j, capacity_rps=float(lam.sum() / m * 1.4))
+             for j in range(m)]
+    inv = Inventory(devices, edges)
+    ctl = LearningController(inventory=inv, l=2)
+    dep = ctl.deploy()
+    return ds, sensors, inv, ctl, dep
+
+
+def test_clustering_feasible(pipeline):
+    ds, sensors, inv, ctl, dep = pipeline
+    inst = inv.to_instance(l=2)
+    assert is_feasible(inst, dep.topology.assign)
+    assert dep.topology.participant_count() == len(sensors)
+
+
+def test_continual_training_converges(pipeline):
+    ds, sensors, inv, ctl, dep = pipeline
+    cfg = get_config("gru-traffic")
+    run = HFLRunConfig(rounds=4, max_batches=12, max_val_windows=128,
+                       local_epochs=3)
+    hfl = ContinualHFL(cfg, ds, sensors, dep.topology, run, mode="hier")
+    res = hfl.run_rounds()
+    means = res.mse.mean(axis=1)
+    assert np.isfinite(means).all()
+    assert means[-1] < means[0]          # learning happened
+    assert res.mse.shape == (4, len(sensors))
+
+
+def test_inference_latency_ordering(pipeline):
+    ds, sensors, inv, ctl, dep = pipeline
+    inst = inv.to_instance(l=2)
+    logs = compare_methods(
+        inst, {"flat": None, "hflop": dep.topology.assign},
+        SimConfig(duration_s=60, seed=0))
+    # paper Fig. 7: flat ~79 ms, HFLOP ~10 ms
+    assert logs["flat"].mean_latency() > 50
+    assert logs["hflop"].mean_latency() < 25
+    assert logs["hflop"].std_latency() < logs["flat"].std_latency() + 20
+
+
+def test_cost_accounting_ordering(pipeline):
+    ds, sensors, inv, ctl, dep = pipeline
+    inst = inv.to_instance(l=2)
+    flat = flat_fl_cost(inst.n, 100)
+    hier = hfl_cost(inst, dep.topology.assign, 100)
+    assert hier.metered_bytes < flat.metered_bytes
+    assert hier.n_global_rounds == 50
