@@ -53,7 +53,25 @@ def lower_decode(arch: str, shape: str, cache_dtype: str = ""):
     return cfg, compiled, args_b
 
 
-def report(arch="stablelm-1.6b", shape="decode_32k", out=""):
+def measured_decode(arch: str, decode_steps: int = 16) -> dict:
+    """Wall-clock continuous-batching decode step times from the tiered
+    ReplicaPool (reduced config on this host): the measured counterpart
+    of the analytic memory term, and the TPOT source for
+    ``LatencyModel.from_measurements``."""
+    from repro.serving import ReplicaPool, lm_tiers
+    pool = ReplicaPool(lm_tiers(arch))
+    meas = pool.measure(prompt_len=32, decode_steps=decode_steps)
+    out = {}
+    for tier, m in meas.items():
+        print(f"measured[{tier:6s}]: decode={m.decode_ms_per_token:7.2f} "
+              f"ms/token @ {m.batch_size} slots")
+        out[tier] = {"decode_ms_per_token": m.decode_ms_per_token,
+                     "batch_size": m.batch_size}
+    return out
+
+
+def report(arch="stablelm-1.6b", shape="decode_32k", out="",
+           measure=False):
     mesh = make_production_mesh(multi_pod=False)
     shp = INPUT_SHAPES[shape]
     res = {}
@@ -87,6 +105,8 @@ def report(arch="stablelm-1.6b", shape="decode_32k", out=""):
     res["it2"] = {"args_bytes": args2, "memory_s": mem_it2}
     res["total_gain"] = ana0.memory_s / mem_it2
     print(f"total: {res['total_gain']:.2f}x on the dominant (memory) term")
+    if measure:
+        res["measured"] = measured_decode(arch)
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
@@ -99,5 +119,7 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--out", default="results/perf_decode_cache.json")
+    ap.add_argument("--measure", action="store_true",
+                    help="also time the real tiered engines (ReplicaPool)")
     a = ap.parse_args()
-    report(a.arch, a.shape, a.out)
+    report(a.arch, a.shape, a.out, measure=a.measure)

@@ -36,7 +36,24 @@ def lower_with(arch: str, shape: str, overrides):
     return collective_stats(compiled.as_text())
 
 
-def report(arch="xlstm-125m", shape="prefill_32k", out=""):
+def measured_prefill(arch: str, prompt_len: int = 128) -> dict:
+    """Wall-clock prefill timings from the tiered ReplicaPool on the CPU
+    host (reduced config) — the measured counterpart of the analytic
+    roofline above, and the calibration source for the routing
+    simulator's calibrated latency mode."""
+    from repro.serving import ReplicaPool, lm_tiers
+    pool = ReplicaPool(lm_tiers(arch, max_len=2 * prompt_len))
+    meas = pool.measure(prompt_len=prompt_len, decode_steps=2)
+    out = {}
+    for tier, m in meas.items():
+        print(f"measured[{tier:6s}]: prefill={m.prefill_ms:8.2f} ms "
+              f"({prompt_len} tokens, one-shot)  slots={m.batch_size}")
+        out[tier] = {"prefill_ms": m.prefill_ms,
+                     "batch_size": m.batch_size}
+    return out
+
+
+def report(arch="xlstm-125m", shape="prefill_32k", out="", measure=False):
     mesh = make_production_mesh(multi_pod=False)
     cfg = get_config(arch)
     shp = INPUT_SHAPES[shape]
@@ -66,6 +83,8 @@ def report(arch="xlstm-125m", shape="prefill_32k", out=""):
         results[name] = {"bytes": st.total_bytes, "counts": st.count_by_kind,
                          "coll_s": coll_s}
         prev = st.total_bytes
+    if measure:
+        results["measured"] = measured_prefill(arch)
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
@@ -78,5 +97,7 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="xlstm-125m")
     ap.add_argument("--shape", default="prefill_32k")
     ap.add_argument("--out", default="results/perf_prefill_sharding.json")
+    ap.add_argument("--measure", action="store_true",
+                    help="also time the real tiered engines (ReplicaPool)")
     a = ap.parse_args()
-    report(a.arch, a.shape, a.out)
+    report(a.arch, a.shape, a.out, measure=a.measure)

@@ -57,6 +57,10 @@ def main() -> None:
         fig6_continual_fl.run_continual_vs_static(
             rounds=12 if args.full else 4)
 
+    print("# --- tiered serving subsystem ---", file=sys.stderr)
+    from benchmarks import perf_serving_scheduler
+    perf_serving_scheduler.report(out="")
+
     print("# --- Pallas kernels (interpret mode) ---", file=sys.stderr)
     from benchmarks import kernels_bench
     kernels_bench.run()

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# CI entry point: the repo's tier-1 verification in one command.
+#   scripts/ci.sh            # run the tier-1 test suite
+#   scripts/ci.sh -k serving # pass extra pytest args through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

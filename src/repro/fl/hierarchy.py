@@ -22,6 +22,13 @@ from repro.fl.client import (ClientBatch, eval_clients, stack_clients,
 from repro.models import gru
 
 
+def _even_indices(n: int, k: int) -> np.ndarray:
+    """k indices spread evenly over [0, n) (all of them if n <= k)."""
+    if n <= k:
+        return np.arange(n)
+    return np.linspace(0, n - 1, k).astype(int)
+
+
 @dataclass
 class HFLRunConfig:
     rounds: int = 100
@@ -84,8 +91,13 @@ class ContinualHFL:
             ys.append(y)
             X2, y2 = windows_for_sensor(self.ds, int(s), va.start, va.stop,
                                         r.history)
-            Xv.append(X2[:r.max_val_windows])
-            yv.append(y2[:r.max_val_windows])
+            # subsample the val week EVENLY: max_val_windows contiguous
+            # windows cover only ~max_val_windows*5min, so a truncated
+            # prefix slides through the daily cycle as rounds shift and
+            # the metric tracks time-of-day, not learning
+            idx = _even_indices(len(X2), r.max_val_windows)
+            Xv.append(X2[idx])
+            yv.append(y2[idx])
         train = ClientBatch(X=jnp.asarray(np.stack(Xs)),
                             y=jnp.asarray(np.stack(ys)))
         val = ClientBatch(X=jnp.asarray(np.stack(Xv)),
@@ -144,9 +156,10 @@ def continuous_vs_static(cfg: ArchConfig, ds: TrafficDataset, sensor: int,
         X, y = windows_for_sensor(ds, sensor, tr.start, tr.stop, run.history)
         Xv, yv = windows_for_sensor(ds, sensor, va.start, va.stop,
                                     run.history)
+        idx = _even_indices(len(Xv), run.max_val_windows)
         return (ClientBatch(jnp.asarray(X[None]), jnp.asarray(y[None])),
-                ClientBatch(jnp.asarray(Xv[None][:, :run.max_val_windows]),
-                            jnp.asarray(yv[None][:, :run.max_val_windows])))
+                ClientBatch(jnp.asarray(Xv[idx][None]),
+                            jnp.asarray(yv[idx][None])))
 
     # static: train once on round-0 window
     tr0, _ = data(0)

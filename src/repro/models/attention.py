@@ -229,6 +229,55 @@ def gqa_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 
 
+def _ring_write(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
+    """Scatter ``new`` (B,S,...) into ring slots along axis 1; entries whose
+    slot index equals the capacity are dropped (pad / out-of-window)."""
+    return buf.at[:, slots].set(new.astype(buf.dtype), mode="drop")
+
+
+def prefill_slots(capacity: int, positions: jax.Array,
+                  length: jax.Array) -> jax.Array:
+    """Ring slot for each prompt position: the last ``min(length,
+    capacity)`` valid positions land at ``pos % capacity``; everything else
+    (right padding, positions older than the ring) maps to ``capacity``,
+    which ``mode='drop'`` scatters discard."""
+    keep = (positions < length) & (positions >= length - capacity)
+    return jnp.where(keep, positions % capacity, capacity)
+
+
+def gqa_prefill(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                positions: jax.Array, length: jax.Array, cache: KVCache,
+                inv_freq: Optional[jax.Array], window=None,
+                ) -> Tuple[jax.Array, KVCache]:
+    """Full-sequence prefill: identical math to :func:`gqa_forward` plus a
+    one-shot ring write of the roped K/V for positions ``[0, length)``.
+    ``x`` may be right-padded beyond ``length``; causality keeps pad keys
+    out of every valid query's receptive field."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    q = shard(q, "batch", "seq", "heads_act", None)
+    k = shard(k, "batch", "seq", "kv_heads_act", None)
+    v = shard(v, "batch", "seq", "kv_heads_act", None)
+    out = sdpa(q, k, v, positions, positions, causal=True, window=window)
+    slots = prefill_slots(cache.capacity, positions, length)
+    pos_rows = jnp.broadcast_to(positions[None], (B, S))
+    new_cache = KVCache(
+        k=_ring_write(cache.k, k, slots),
+        v=_ring_write(cache.v, v, slots),
+        pos=cache.pos.at[:, slots].set(pos_rows, mode="drop"),
+        index=jnp.asarray(length, jnp.int32),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2) forward + absorbed decode
 # ---------------------------------------------------------------------------
@@ -287,6 +336,38 @@ def mla_forward(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
     k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
     out = sdpa(q_full, k_full, v, positions, positions, causal=True)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_prefill(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                positions: jax.Array, length: jax.Array, cache: MLACache,
+                inv_freq: Optional[jax.Array],
+                ) -> Tuple[jax.Array, MLACache]:
+    """Full-sequence MLA prefill: :func:`mla_forward` math plus a one-shot
+    write of the compressed latents for positions ``[0, length)``."""
+    m = a.mla
+    B, S, _ = x.shape
+    H = a.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if inv_freq is not None:
+        q_rope = apply_rope(q_rope, positions, inv_freq)
+    c_kv, k_rope = _mla_latents(p, a, x, positions, inv_freq)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = sdpa(q_full, k_full, v, positions, positions, causal=True)
+    slots = prefill_slots(cache.capacity, positions, length)
+    pos_rows = jnp.broadcast_to(positions[None], (B, S))
+    new_cache = MLACache(
+        c_kv=_ring_write(cache.c_kv, c_kv, slots),
+        k_rope=_ring_write(cache.k_rope, k_rope, slots),
+        pos=cache.pos.at[:, slots].set(pos_rows, mode="drop"),
+        index=jnp.asarray(length, jnp.int32),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 
 
 def mla_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,

@@ -27,6 +27,10 @@ class ModelApi(NamedTuple):
     loss: Callable[[Any, Dict[str, jax.Array]], jax.Array]
     init_cache: Callable[[int, int], Any]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
+    # one-shot full-sequence prefill writing the KV/latent cache; None for
+    # inherently recurrent families (the engine falls back to a fused
+    # scan-over-decode program there)
+    prefill: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
 
 
 def _extra(batch: Dict[str, jax.Array], m: ModelConfig):
@@ -90,6 +94,12 @@ def make_model(cfg: ArchConfig) -> ModelApi:
     cache_dtype = (jnp.dtype(cfg.run.cache_dtype)
                    if cfg.run.cache_dtype else None)
 
+    prefill = None
+    if mod is transformer:
+        def prefill(params, tokens, cache, length=None, **kw):
+            return transformer.prefill(params, m, tokens, cache,
+                                       length=length, **kw)
+
     return ModelApi(
         cfg=cfg,
         init_params=lambda rng: mod.init_params(rng, m),
@@ -97,4 +107,5 @@ def make_model(cfg: ArchConfig) -> ModelApi:
         loss=loss,
         init_cache=lambda b, n: mod.init_cache(m, b, n, dtype=cache_dtype),
         decode_step=decode,
+        prefill=prefill,
     )

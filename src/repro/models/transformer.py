@@ -237,6 +237,81 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     return {"lead": lead, "layers": per}
 
 
+def _layer_prefill(cfg, p, x, positions, length, cache, inv_freq, window,
+                   moe_layer):
+    a = cfg.attention
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    if a.kind == "mla":
+        y, cache = attn.mla_prefill(p["attn"], a, h, positions, length,
+                                    cache, inv_freq)
+    else:
+        y, cache = attn.gqa_prefill(p["attn"], a, h, positions, length,
+                                    cache, inv_freq, window=window)
+    x = x + y
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if moe_layer:
+        y, _ = apply_moe(p["moe"], cfg.moe, h, cfg.act)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache,
+            length=None, extra_embeds=None):
+    """One-shot prefill: the same full-sequence pass as :func:`forward`,
+    but every layer also writes its KV/latent cache for positions
+    ``[0, length)`` in a single scatter — S sequential decode steps
+    collapse into one program.  ``tokens`` (B,S) may be right-padded
+    beyond ``length``; returns (logits (B,S,V), cache ready for decode at
+    position ``length``)."""
+    if length is None:
+        length = tokens.shape[1]
+    length = jnp.asarray(length, jnp.int32)
+    x = embed_tokens(params, cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.attention.rope_theta == 0.0:
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    moe_layer = cfg.moe is not None
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    new_lead = {}
+    for i in range(n_lead):
+        x, c = _layer_prefill(cfg, params["lead"][str(i)], x, positions,
+                              length, cache["lead"][str(i)],
+                              stacked_rope(cfg, [i])[0],
+                              jnp.int32(layer_window(cfg, i)), False)
+        new_lead[str(i)] = c
+    rest = list(range(n_lead, cfg.num_layers))
+    stacked = not isinstance(cache["layers"], dict)
+    if stacked:
+        inv_freqs = stacked_rope(cfg, rest)
+        windows = stacked_windows(cfg, rest)
+
+        def body(x_c, xs):
+            p, c, ifr, win = xs
+            xo, c2 = _layer_prefill(cfg, p, x_c, positions, length, c, ifr,
+                                    win, moe_layer)
+            return xo, c2
+
+        x, new_stack = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], inv_freqs, windows))
+        new_cache = {"lead": new_lead, "layers": new_stack}
+    else:
+        new_per = {}
+        for i in rest:
+            p = jax.tree.map(lambda a_: a_[i - n_lead], params["layers"])
+            x, c = _layer_prefill(cfg, p, x, positions, length,
+                                  cache["layers"][str(i)],
+                                  stacked_rope(cfg, [i])[0],
+                                  jnp.int32(layer_window(cfg, i)), moe_layer)
+            new_per[str(i)] = c
+        new_cache = {"lead": new_lead, "layers": new_per}
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
 def _layer_decode(cfg, p, x, pos, cache, inv_freq, window, moe_layer):
     a = cfg.attention
     h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)

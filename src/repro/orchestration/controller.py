@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -19,20 +19,27 @@ from repro.core.solvers import solve_bnb, solve_heuristic
 from repro.core.topology import ClusterTopology
 from repro.orchestration.gpo import Inventory
 
+if TYPE_CHECKING:   # deployments without serving tiers never import jax
+    from repro.serving.replica import ReplicaPool, TierSpec
+
 
 @dataclass
 class Deployment:
     """The containerized deployment the GPO would realize: one aggregator
     service per open edge, one client + inference service + routing agent
-    per participating device."""
+    per participating device — plus the tiered serving replicas HFL
+    leaves behind "for free" (one model copy per tier)."""
     topology: ClusterTopology
     aggregator_nodes: List[int]
     client_nodes: List[int]
     inference_services: List[str]
+    replica_pool: Optional["ReplicaPool"] = None
     created_at: float = field(default_factory=time.monotonic)
 
     @classmethod
-    def from_topology(cls, topo: ClusterTopology) -> "Deployment":
+    def from_topology(cls, topo: ClusterTopology,
+                      serving_tiers: Optional[Sequence["TierSpec"]] = None,
+                      ) -> "Deployment":
         aggs = [int(j) for j in topo.open_edges]
         clients = [int(i) for i in np.nonzero(topo.assign >= 0)[0]]
         services = ([f"aggregator/edge-{j}" for j in aggs]
@@ -40,8 +47,26 @@ class Deployment:
                     + [f"client/device-{i}" for i in clients]
                     + [f"routing-agent/device-{i}" for i in clients]
                     + ["aggregator/global", "inference/global"])
+        pool = None
+        if serving_tiers is not None:
+            from repro.serving.replica import ReplicaPool
+            pool = ReplicaPool(serving_tiers)
+            services += [f"replica/{t}" for t in pool.tiers]
         return cls(topology=topo, aggregator_nodes=aggs,
-                   client_nodes=clients, inference_services=services)
+                   client_nodes=clients, inference_services=services,
+                   replica_pool=pool)
+
+    def calibrated_latency(self, decode_tokens: int = 0, **kwargs):
+        """Measure this deployment's replicas and return a
+        ``CalibratedLatencyModel`` for the routing simulator (the
+        serving -> simulation bridge)."""
+        from repro.routing.latency import LatencyModel
+        if self.replica_pool is None:
+            raise ValueError("deployment has no replica pool "
+                             "(pass serving_tiers to deploy())")
+        return LatencyModel.from_measurements(
+            self.replica_pool.measure(), decode_tokens=decode_tokens,
+            **kwargs)
 
 
 @dataclass
@@ -51,6 +76,7 @@ class LearningController:
     T: Optional[int] = None
     exact: bool = False              # exact B&B vs heuristic clustering
     accuracy_threshold: float = 0.06 # MSE above this triggers retraining
+    serving_tiers: Optional[Sequence["TierSpec"]] = None  # None -> no pool
     deployment: Optional[Deployment] = None
     solution: Optional[HFLOPSolution] = None
     recluster_count: int = 0
@@ -65,7 +91,8 @@ class LearningController:
 
     def deploy(self) -> Deployment:
         topo = self.cluster()
-        self.deployment = Deployment.from_topology(topo)
+        self.deployment = Deployment.from_topology(
+            topo, serving_tiers=self.serving_tiers)
         return self.deployment
 
     # -- reactions to environment / service events (paper §III last para) --

@@ -1,7 +1,8 @@
-from repro.routing.latency import LatencyModel
+from repro.routing.latency import CalibratedLatencyModel, LatencyModel
 from repro.routing.rules import EdgeState, RouteDecision, route_request
 from repro.routing.simulator import (RequestLog, SimConfig, compare_methods,
                                      simulate)
 
-__all__ = ["LatencyModel", "EdgeState", "RouteDecision", "route_request",
-           "RequestLog", "SimConfig", "compare_methods", "simulate"]
+__all__ = ["CalibratedLatencyModel", "LatencyModel", "EdgeState",
+           "RouteDecision", "route_request", "RequestLog", "SimConfig",
+           "compare_methods", "simulate"]

@@ -3,10 +3,22 @@
 The paper measured HTTP round-trip times: cloud 50-100 ms, edge 8-10 ms.
 Processing time is the model's inference time, scaled per serving tier:
 Fig. 8 sweeps a "theoretical speedup of up to 95%" of cloud vs edge
-compute, i.e. cloud_infer = edge_infer * (1 - speedup)."""
+compute, i.e. cloud_infer = edge_infer * (1 - speedup).
+
+Two service-time models share this interface:
+
+  - :class:`LatencyModel` — the paper's constant closed-form per-tier
+    inference time (the fast default; reproduces Fig. 7/8 exactly);
+  - :class:`CalibratedLatencyModel` — per-tier service times *measured*
+    from the real serving engines (``ReplicaPool.measure()``), with
+    occupancy-dependent slowdown once a replica's continuous-batching
+    slots are oversubscribed.  Built via
+    ``LatencyModel.from_measurements(...)``.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, Mapping
 
 import numpy as np
 
@@ -27,7 +39,10 @@ class LatencyModel:
                   "cloud": self.cloud_rtt_ms}[tier]
         return rng.uniform(lo, hi, size)
 
-    def infer_ms(self, tier: str) -> float:
+    def infer_ms(self, tier: str, occupancy: float = 0.0) -> float:
+        """Service time of one request on ``tier``.  ``occupancy`` is the
+        number of requests already in service on the chosen replica; the
+        constant model ignores it (closed-form paper behaviour)."""
         if tier == "cloud":
             return self.base_infer_ms * (1.0 - self.cloud_speedup)
         if tier == "device":
@@ -38,3 +53,45 @@ class LatencyModel:
         """Edge->cloud forwarding hop (R3 overflow): the request pays the
         edge leg plus the cloud leg."""
         return float(self.rtt("cloud", rng))
+
+    @classmethod
+    def from_measurements(cls, measurements: Mapping[str, object],
+                          decode_tokens: int = 0,
+                          **kwargs) -> "CalibratedLatencyModel":
+        """Build a calibrated model from per-tier engine measurements
+        (``ReplicaPool.measure()`` output, or anything exposing
+        ``prefill_ms`` / ``decode_ms_per_token`` / ``batch_size``).
+
+        ``decode_tokens`` is the per-request generation length the
+        simulator should assume; 0 means prefill-only service (the
+        paper's GRU: one forward per request).  Extra ``kwargs`` override
+        the network RTT fields."""
+        service, slots = {}, {}
+        for tier, m in measurements.items():
+            service[tier] = float(m.prefill_ms
+                                  + decode_tokens * m.decode_ms_per_token)
+            slots[tier] = int(m.batch_size)
+        return CalibratedLatencyModel(tier_service_ms=service,
+                                      tier_slots=slots, **kwargs)
+
+
+@dataclass(frozen=True)
+class CalibratedLatencyModel(LatencyModel):
+    """Per-tier service times measured from the serving engines.
+
+    ``infer_ms`` becomes occupancy-dependent: a replica's continuous-
+    batching slots serve concurrently at the measured rate; once
+    ``occupancy`` exceeds the slot count, requests time-share the decode
+    program and per-request service stretches proportionally.  Tiers
+    without a measurement fall back to the constant closed-form model, so
+    a partially calibrated pool still simulates."""
+    tier_service_ms: Dict[str, float] = field(default_factory=dict)
+    tier_slots: Dict[str, int] = field(default_factory=dict)
+
+    def infer_ms(self, tier: str, occupancy: float = 0.0) -> float:
+        base = self.tier_service_ms.get(tier)
+        if base is None:
+            return super().infer_ms(tier, occupancy)
+        slots = max(self.tier_slots.get(tier, 1), 1)
+        oversubscription = max((occupancy + 1.0) / slots, 1.0)
+        return base * oversubscription

@@ -87,7 +87,10 @@ def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:
             edges[j].in_service -= 1
         busy = rng.uniform() < cfg.busy_fraction
         dec = route_request(i, busy, topo.assign, edges, now=t)
-        service = lat.infer_ms(dec.tier)
+        # calibrated mode: service time reflects how many requests the
+        # chosen replica already has in flight (constant model ignores it)
+        occ = edges[dec.edge].in_service if dec.tier == "edge" else 0
+        service = lat.infer_ms(dec.tier, occupancy=occ)
         if dec.tier == "edge":
             edges[dec.edge].admit(t)
             heapq.heappush(completions, (t + service / 1000.0, dec.edge))

@@ -1,6 +1,13 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import EngineMeasurement, ServeEngine, bucket_len
+from repro.serving.replica import (DEFAULT_TIERS, ReplicaPool, TierSpec,
+                                   lm_tiers)
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     ScheduleStats, requests_from_events)
 from repro.serving.workload import (RequestEvent, batched_arrivals,
                                     poisson_requests)
 
-__all__ = ["ServeEngine", "RequestEvent", "batched_arrivals",
+__all__ = ["EngineMeasurement", "ServeEngine", "bucket_len",
+           "DEFAULT_TIERS", "ReplicaPool", "TierSpec", "lm_tiers",
+           "ContinuousBatchingScheduler", "Request", "ScheduleStats",
+           "requests_from_events", "RequestEvent", "batched_arrivals",
            "poisson_requests"]

@@ -1,16 +1,54 @@
-"""Serving engine: jitted prefill / decode steps over the unified model
-API, with greedy sampling.  ``decode_step`` is the program lowered by the
-``decode_32k`` / ``long_500k`` dry-run shapes."""
+"""Serving engine: one-shot jitted prefill + slot-based continuous-batching
+decode over the unified model API.
+
+The engine owns a fixed number of *slots* (``batch_size``).  Each slot
+holds one in-flight sequence: its KV/state cache, absolute position and
+next input token.  Admission runs a single jitted **prefill** program
+(full-sequence forward writing the cache in one scatter — see
+``transformer.prefill``), or, for the inherently recurrent families
+(ssm / hybrid / audio), a fused ``lax.scan`` over decode steps compiled
+into one program.  All active slots then share ONE jitted decode program
+(``decode_step`` vmapped over slots with per-slot positions), so
+heterogeneous Poisson arrivals genuinely batch together: a sequence can be
+admitted into slot 3 while slot 0 is 400 tokens into its generation.
+
+The seed token-by-token prompt path is kept as ``generate_sequential`` —
+it is the baseline that ``benchmarks/perf_serving_scheduler.py`` measures
+the prefill path against.
+"""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import ModelApi, make_model
+from repro.models import make_model
+
+
+def bucket_len(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (>= lo): prompts are right-padded to
+    buckets so the number of distinct prefill compilations stays
+    O(log max_prompt_len)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass(frozen=True)
+class EngineMeasurement:
+    """Wall-clock engine timings — the raw material for
+    ``LatencyModel.from_measurements`` (routing/latency.py)."""
+    prefill_ms: float              # one admission of a prompt_len prompt
+    decode_ms_per_token: float     # one continuous-batching step
+    batch_size: int                # slots sharing the decode program
+    prompt_len: int
+    decode_steps: int
 
 
 class ServeEngine:
@@ -21,31 +59,191 @@ class ServeEngine:
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len or cfg.run.max_cache_len
-        self.cache = self.api.init_cache(batch_size, self.max_len)
-        self.pos = jnp.zeros((), jnp.int32)
-        self._decode = jax.jit(self._decode_impl)
+        template = self.api.init_cache(1, self.max_len)
+        if template is None:
+            raise ValueError(
+                f"{cfg.name}: family {cfg.model.family!r} has no decode "
+                "cache — serve it per-request via ReplicaPool instead")
+        # per-slot cache: every leaf gains a leading slot axis, and each
+        # slot keeps its own ring index / positions
+        self._slot_template = template
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (batch_size,) + x.shape),
+            template)
+        self.pos = jnp.zeros((batch_size,), jnp.int32)
+        self.next_tok = jnp.zeros((batch_size, 1, 1), jnp.int32)
+        self.free_slots: List[int] = list(range(batch_size))
 
-    def _decode_impl(self, params, tokens, pos, cache):
+        self._decode = jax.jit(
+            jax.vmap(self._slot_decode, in_axes=(None, 0, 0, 0)))
+        self._prefill = jax.jit(self._prefill_impl)
+        self._insert = jax.jit(self._insert_impl)
+        self._seq_decode = jax.jit(self._seq_decode_impl)
+
+    # -- jitted programs ----------------------------------------------------
+
+    def _slot_decode(self, params, tok, pos, cache):
+        """One decode step for one slot (vmapped over slots)."""
+        logits, cache = self.api.decode_step(params, tok, pos, cache)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+
+    def _prefill_impl(self, params, tokens, length, cache):
+        """tokens (1, S_bucket) right-padded; length () valid tokens.
+        Returns (first generated token (1,), prefilled cache)."""
+        if self.api.prefill is not None:
+            logits, cache = self.api.prefill(params, tokens, cache,
+                                             length=length)
+            last = logits[:, length - 1, :]
+        else:
+            # recurrent families: fused scan over decode steps — still ONE
+            # program per bucket instead of S python-level dispatches
+            S = tokens.shape[1]
+            toks = tokens.T[:, :, None]                  # (S, 1, 1)
+            ts = jnp.arange(S, dtype=jnp.int32)
+
+            def body(c, xs):
+                tok, t = xs
+                logits, new_c = self.api.decode_step(params, tok, t, c)
+                keep = t < length
+                c = jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                                 new_c, c)
+                return c, logits[:, -1, :]
+
+            cache, ys = jax.lax.scan(body, cache, (toks, ts))
+            last = ys[length - 1]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+
+    def _insert_impl(self, cache, new, slot):
+        return jax.tree.map(lambda c, n: c.at[slot].set(n), cache, new)
+
+    def _seq_decode_impl(self, params, tokens, pos, cache):
         logits, cache = self.api.decode_step(params, tokens, pos, cache)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return next_tok, cache
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
 
-    def step(self, tokens: jax.Array) -> jax.Array:
-        """tokens (B,1) -> next token ids (B,)."""
-        next_tok, self.cache = self._decode(self.params, tokens, self.pos,
-                                            self.cache)
+    # -- slot management ----------------------------------------------------
+
+    def acquire_slot(self) -> Optional[int]:
+        return self.free_slots.pop(0) if self.free_slots else None
+
+    def admit(self, prompt, slot: int) -> int:
+        """Prefill ``prompt`` (S,) into ``slot``.  Returns the first
+        generated (greedy) token."""
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        S = prompt.shape[1]
+        if S > self.max_len:
+            raise ValueError(f"prompt ({S}) exceeds max_len {self.max_len}")
+        Sb = bucket_len(S)
+        padded = jnp.zeros((1, Sb), jnp.int32).at[:, :S].set(prompt)
+        first, slot_cache = self._prefill(self.params, padded,
+                                          jnp.int32(S), self._slot_template)
+        self.cache = self._insert(self.cache, slot_cache, jnp.int32(slot))
+        self.pos = self.pos.at[slot].set(S)
+        self.next_tok = self.next_tok.at[slot, 0, 0].set(first[0])
+        if slot in self.free_slots:
+            self.free_slots.remove(slot)
+        return int(first[0])
+
+    def evict(self, slot: int) -> None:
+        """Release a slot.  Its stale cache is simply overwritten by the
+        next admission — no device work."""
+        if slot not in self.free_slots:
+            self.free_slots.append(slot)
+
+    @property
+    def active_slots(self) -> int:
+        return self.batch_size - len(self.free_slots)
+
+    # -- decode -------------------------------------------------------------
+
+    def decode(self) -> np.ndarray:
+        """One continuous-batching step: every slot advances one token
+        under its own position.  Returns (batch_size,) token ids (entries
+        for free slots are meaningless)."""
+        toks, self.cache = self._decode(self.params, self.next_tok,
+                                        self.pos, self.cache)
         self.pos = self.pos + 1
-        return next_tok
+        self.next_tok = toks[:, :, None]
+        return np.asarray(toks[:, 0])
+
+    # -- convenience generation paths --------------------------------------
 
     def generate(self, prompt_tokens: jax.Array, steps: int) -> jax.Array:
-        """Greedy generation: feeds the prompt token-by-token then samples
-        ``steps`` continuations.  Returns (B, steps)."""
+        """Greedy generation via prefill + continuous-batching decode.
+        Returns (B, steps) — same contract as the seed engine.
+
+        Requires an idle engine: ``decode`` advances *every* slot, so
+        interleaving ``generate`` with externally managed sequences would
+        silently consume their tokens.  Mixed workloads go through
+        ``ContinuousBatchingScheduler`` instead."""
         B, S = prompt_tokens.shape
-        out = []
+        if B > self.batch_size:
+            raise ValueError(f"batch {B} exceeds {self.batch_size} slots")
+        if self.active_slots:
+            raise RuntimeError(
+                "engine has active sequences; drive mixed workloads "
+                "through ContinuousBatchingScheduler")
+        slots = [self.acquire_slot() for _ in range(B)]
+        first = [self.admit(prompt_tokens[b], slot=s)
+                 for b, s in enumerate(slots)]
+        out = [np.asarray(first, np.int32)]
+        for _ in range(steps - 1):
+            toks = self.decode()
+            out.append(toks[np.asarray(slots)])
+        for s in slots:
+            self.evict(s)
+        return jnp.asarray(np.stack(out, axis=1))
+
+    def generate_sequential(self, prompt_tokens: jax.Array,
+                            steps: int) -> jax.Array:
+        """The seed path: feeds the prompt token-by-token (S sequential
+        decode dispatches) then samples ``steps`` continuations.  Kept as
+        the baseline for the prefill speedup benchmark."""
+        B, S = prompt_tokens.shape
+        cache = self.api.init_cache(B, self.max_len)
         tok = None
         for s in range(S):
-            tok = self.step(prompt_tokens[:, s:s + 1])
-        for _ in range(steps):
+            tok, cache = self._seq_decode(self.params,
+                                          prompt_tokens[:, s:s + 1],
+                                          jnp.int32(s), cache)
+        out = []
+        for t in range(steps):
             out.append(tok)
-            tok = self.step(tok[:, None])
+            tok, cache = self._seq_decode(self.params, tok[:, None],
+                                          jnp.int32(S + t), cache)
         return jnp.stack(out, axis=1)
+
+    # -- calibration --------------------------------------------------------
+
+    def measure(self, prompt_len: int = 64, decode_steps: int = 16,
+                seed: int = 0) -> EngineMeasurement:
+        """Measure wall-clock prefill and continuous-batching step times
+        (after a warmup pass that triggers compilation).
+
+        Safe to call mid-serving: the engine's slot state (caches,
+        positions, pending tokens) is snapshotted before and restored
+        after, so in-flight sequences resume exactly where they were —
+        the measurement decodes never reach them."""
+        saved = (self.cache, self.pos, self.next_tok,
+                 list(self.free_slots))
+        rng = np.random.default_rng(seed)
+        vocab = max(self.cfg.model.vocab_size, 2)
+        prompt = rng.integers(0, vocab, (prompt_len,))
+        slot = self.free_slots[0] if self.free_slots else 0
+        try:
+            self.admit(prompt, slot=slot)        # warmup: compile prefill
+            self.decode()                        # warmup: compile decode
+            t0 = time.perf_counter()
+            self.admit(prompt, slot=slot)
+            prefill_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            for _ in range(decode_steps):
+                self.decode()
+            decode_ms = (time.perf_counter() - t0) * 1e3 \
+                / max(decode_steps, 1)
+        finally:
+            self.cache, self.pos, self.next_tok, self.free_slots = saved
+        return EngineMeasurement(prefill_ms=prefill_ms,
+                                 decode_ms_per_token=decode_ms,
+                                 batch_size=self.batch_size,
+                                 prompt_len=prompt_len,
+                                 decode_steps=decode_steps)

@@ -1,0 +1,166 @@
+"""Tiered replica pool — the paper's "replication for free" (§III): HFL
+leaves a model replica at every tier (device, edge aggregator, cloud), so
+serving can dispatch to whichever tier routing selects.
+
+One :class:`ServeEngine` per tier, with per-tier batch sizes (=concurrency
+caps) mirroring the hardware asymmetry: a device serves one sequence at a
+time, an edge host a handful, the cloud a large batch.  The paper's own
+GRU (family ``rnn``) has no token decode loop — each request is one
+forward over a history window — so it is served through a jitted
+per-request path instead of the slot engine.
+
+``measure()`` produces the per-tier timings that
+``LatencyModel.from_measurements`` turns into a calibrated latency model
+for the routing simulator (the bridge closing the serving <-> simulation
+loop).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import make_model
+from repro.serving.engine import EngineMeasurement, ServeEngine
+
+TIERS = ("device", "edge", "cloud")
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    tier: str                        # device | edge | cloud
+    arch: str = "gru-traffic"        # config-registry name
+    batch_size: int = 1              # engine slots = concurrency cap
+    max_len: int = 256
+    reduced: bool = True             # CPU-sized config variant
+    replicas: int = 1                # replicas behind this tier
+
+
+# the paper serves ONE model from every tier; the tiers differ in
+# concurrency, not in weights
+DEFAULT_TIERS: Tuple[TierSpec, ...] = (
+    TierSpec("device", batch_size=1),
+    TierSpec("edge", batch_size=4),
+    TierSpec("cloud", batch_size=16),
+)
+
+
+def lm_tiers(arch: str = "xlstm-125m", max_len: int = 256,
+             ) -> Tuple[TierSpec, ...]:
+    """Tier layout for a token-decoding LM (benchmarks / examples)."""
+    return (TierSpec("device", arch=arch, batch_size=1, max_len=max_len),
+            TierSpec("edge", arch=arch, batch_size=4, max_len=max_len),
+            TierSpec("cloud", arch=arch, batch_size=8, max_len=max_len))
+
+
+class _RnnReplica:
+    """Per-request serving path for the paper's GRU: one jitted forward
+    per request batch (the request's unit of work, gru.decode_step)."""
+
+    def __init__(self, cfg, params):
+        self.cfg = cfg
+        self.params = params
+        self.api = make_model(cfg)
+        self._fwd = jax.jit(
+            lambda p, w: self.api.forward(p, {"windows": w})[0])
+
+    def serve(self, windows: jax.Array) -> jax.Array:
+        return self._fwd(self.params, jnp.asarray(windows, jnp.float32))
+
+    def measure(self, batch_size: int, history: int = 12,
+                repeats: int = 8, seed: int = 0) -> EngineMeasurement:
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(batch_size, history, 1)),
+                        jnp.float32)
+        self.serve(w).block_until_ready()          # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            self.serve(w).block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3 / repeats
+        return EngineMeasurement(prefill_ms=ms, decode_ms_per_token=0.0,
+                                 batch_size=batch_size, prompt_len=history,
+                                 decode_steps=0)
+
+
+class ReplicaPool:
+    """One serving replica per tier, built lazily (constructing engines
+    compiles XLA programs — deployments should stay cheap until traffic
+    actually arrives at a tier)."""
+
+    def __init__(self, specs: Sequence[TierSpec] = DEFAULT_TIERS,
+                 seed: int = 0,
+                 shared_params: Optional[Any] = None):
+        self.specs: Dict[str, TierSpec] = {}
+        for s in specs:
+            if s.tier not in TIERS:
+                raise ValueError(f"unknown tier {s.tier!r}")
+            self.specs[s.tier] = s
+        self.seed = seed
+        self._shared_params = shared_params
+        self._replicas: Dict[str, Any] = {}
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        return tuple(self.specs)
+
+    def concurrency(self, tier: str) -> int:
+        s = self.specs[tier]
+        return s.batch_size * s.replicas
+
+    def _build(self, tier: str):
+        spec = self.specs[tier]
+        cfg = get_config(spec.arch)
+        if spec.reduced:
+            cfg = cfg.reduced()
+        params = self._shared_params
+        if params is None:
+            api = make_model(cfg)
+            # all tiers replicate the SAME trained weights (same seed)
+            params, _ = api.init_params(jax.random.key(self.seed))
+        if cfg.model.family == "rnn":
+            return _RnnReplica(cfg, params)
+        return ServeEngine(cfg, params, batch_size=spec.batch_size,
+                           max_len=spec.max_len)
+
+    def replica(self, tier: str):
+        if tier not in self._replicas:
+            self._replicas[tier] = self._build(tier)
+        return self._replicas[tier]
+
+    def engine(self, tier: str) -> ServeEngine:
+        rep = self.replica(tier)
+        if not isinstance(rep, ServeEngine):
+            raise TypeError(f"tier {tier!r} serves a per-request model")
+        return rep
+
+    # -- dispatch -----------------------------------------------------------
+
+    def dispatch(self, tier: str, batch, steps: int = 8):
+        """Serve one batch on ``tier``: token generation for LM tiers
+        ((B,S) int prompts -> (B,steps) tokens), a single forward for rnn
+        tiers ((B,T,1) windows -> (B,1) predictions)."""
+        rep = self.replica(tier)
+        if isinstance(rep, _RnnReplica):
+            return rep.serve(batch)
+        return rep.generate(jnp.asarray(batch, jnp.int32), steps=steps)
+
+    # -- calibration --------------------------------------------------------
+
+    def measure(self, prompt_len: int = 64, decode_steps: int = 16,
+                ) -> Dict[str, EngineMeasurement]:
+        """Per-tier wall-clock timings — feed the result to
+        ``LatencyModel.from_measurements``."""
+        out = {}
+        for tier in self.specs:
+            rep = self.replica(tier)
+            if isinstance(rep, _RnnReplica):
+                out[tier] = rep.measure(self.specs[tier].batch_size)
+            else:
+                out[tier] = rep.measure(prompt_len=prompt_len,
+                                        decode_steps=decode_steps)
+        return out

@@ -36,13 +36,20 @@ def batched_arrivals(events: List[RequestEvent], batch_size: int,
                      max_wait_s: float = 0.05
                      ) -> Iterator[Tuple[float, np.ndarray]]:
     """Continuous batching: emit a batch when it is full or the oldest
-    request has waited ``max_wait_s``."""
+    request has waited ``max_wait_s``.
+
+    A batch whose deadline (oldest arrival + ``max_wait_s``) passes is
+    flushed *at that deadline*, before the next event joins — a late
+    arrival must open a fresh batch, not ride along with (and further
+    delay) one that should already have left."""
     cur: List[RequestEvent] = []
     for ev in events:
+        if cur and ev.t - cur[0].t >= max_wait_s:
+            yield cur[0].t + max_wait_s, np.asarray([e.device for e in cur])
+            cur = []
         cur.append(ev)
-        if len(cur) >= batch_size or (cur and
-                                      ev.t - cur[0].t >= max_wait_s):
+        if len(cur) >= batch_size:
             yield ev.t, np.asarray([e.device for e in cur])
             cur = []
     if cur:
-        yield cur[-1].t, np.asarray([e.device for e in cur])
+        yield cur[0].t + max_wait_s, np.asarray([e.device for e in cur])

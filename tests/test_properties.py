@@ -1,5 +1,11 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+``hypothesis`` is an optional dev dependency (declared in
+pyproject.toml's ``dev`` extra); skip cleanly where it isn't installed."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HFLOPInstance, is_feasible, objective,
