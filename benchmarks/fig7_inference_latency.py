@@ -38,8 +38,11 @@ def run(duration_s=240.0, seed=0):
     for name, log in logs.items():
         mean, std = log.mean_latency(), log.std_latency()
         cloud = log.tier_fractions()["cloud"]
+        pct = log.latency_percentiles()
         emit(f"fig7_{name}", mean * 1000,
-             f"mean_ms={mean:.2f};std_ms={std:.2f};cloud_frac={cloud:.3f}")
+             f"mean_ms={mean:.2f};std_ms={std:.2f};cloud_frac={cloud:.3f};"
+             f"p50={pct['p50']:.2f};p95={pct['p95']:.2f};"
+             f"p99={pct['p99']:.2f}")
         out[name] = (mean, std, cloud)
     return out
 

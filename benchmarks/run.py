@@ -20,9 +20,18 @@ def main() -> None:
                     help="full-scale figure reproductions (slow)")
     ap.add_argument("--skip-fig6", action="store_true",
                     help="skip the training benchmark (longest section)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast co-sim smoke only (CI entry: exercises the "
+                         "event core + reactive loop in seconds)")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
+
+    if args.smoke:
+        print("# --- co-sim interference smoke ---", file=sys.stderr)
+        from benchmarks import perf_cosim_interference
+        perf_cosim_interference.run(duration_s=60.0)
+        return
 
     print("# --- Fig. 2: HFLOP solver scaling ---", file=sys.stderr)
     from benchmarks import fig2_solver_scaling
@@ -56,6 +65,11 @@ def main() -> None:
         fig6_continual_fl.run(rounds=rounds, max_batches=20)
         fig6_continual_fl.run_continual_vs_static(
             rounds=12 if args.full else 4)
+
+    print("# --- co-sim: training-inference interference ---",
+          file=sys.stderr)
+    from benchmarks import perf_cosim_interference
+    perf_cosim_interference.run(duration_s=240.0 if args.full else 90.0)
 
     print("# --- tiered serving subsystem ---", file=sys.stderr)
     from benchmarks import perf_serving_scheduler

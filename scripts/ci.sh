@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # CI entry point: the repo's tier-1 verification in one command.
-#   scripts/ci.sh            # run the tier-1 test suite
+#   scripts/ci.sh            # tier-1 test suite + fast co-sim smoke
 #   scripts/ci.sh -k serving # pass extra pytest args through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# fast co-sim smoke: exercises the event core, interference model and
+# reactive loop end-to-end on every CI run (seconds, CSV to stdout)
+python -m benchmarks.run --smoke

@@ -1,7 +1,8 @@
 from repro.data.traffic import (TrafficDataset, continual_split, generate,
-                                select_fl_sensors, windows_for_sensor)
+                                inject_drift, select_fl_sensors,
+                                windows_for_sensor)
 from repro.data.tokens import TokenStream, TokenStreamConfig
 
 __all__ = ["TrafficDataset", "continual_split", "generate",
-           "select_fl_sensors", "windows_for_sensor", "TokenStream",
-           "TokenStreamConfig"]
+           "inject_drift", "select_fl_sensors", "windows_for_sensor",
+           "TokenStream", "TokenStreamConfig"]

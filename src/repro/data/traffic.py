@@ -11,7 +11,7 @@ for training exactly like standard METR-LA pipelines."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -92,6 +92,32 @@ def generate(num_days: int = 119, n_sensors: int = N_SENSORS,
     std = speeds.std(axis=0) + 1e-6
     return TrafficDataset(speeds=speeds, cluster_of=cluster_of,
                           positions=positions, mean=mean, std=std)
+
+
+def inject_drift(ds: TrafficDataset, start_step: int,
+                 severity: float = 0.35, ramp_steps: int = STEPS_PER_DAY,
+                 sensors: Optional[np.ndarray] = None) -> TrafficDataset:
+    """Concept drift for the reactive-orchestration loop: from
+    ``start_step`` on, a regime change (lane closures / rerouted demand)
+    depresses speeds by up to ``severity`` with a linear onset ramp.
+
+    The returned dataset keeps the ORIGINAL per-sensor normalization —
+    a model trained pre-drift sees genuinely shifted inputs, so its
+    validation MSE rises (the accuracy-alarm trigger), instead of the
+    drift being silently absorbed into re-standardization."""
+    speeds = ds.speeds.copy()
+    T = speeds.shape[0]
+    if not 0 <= start_step < T:
+        raise ValueError(f"start_step {start_step} outside [0, {T})")
+    idx = (np.asarray(sensors, int) if sensors is not None
+           else np.arange(speeds.shape[1]))
+    ramp = np.clip((np.arange(T - start_step) + 1) / max(ramp_steps, 1),
+                   0.0, 1.0)
+    factor = 1.0 - severity * ramp
+    speeds[start_step:, idx] = np.clip(
+        speeds[start_step:, idx] * factor[:, None], 3.0, 75.0)
+    return TrafficDataset(speeds=speeds, cluster_of=ds.cluster_of,
+                          positions=ds.positions, mean=ds.mean, std=ds.std)
 
 
 # ---------------------------------------------------------------------------

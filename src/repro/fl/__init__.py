@@ -9,7 +9,8 @@ from repro.fl.compression import (EFState, compressed_global_sync,
                                   dequantize_int8, init_ef_state,
                                   quantize_int8, sync_bytes)
 from repro.fl.hierarchy import (ContinualHFL, HFLResult, HFLRunConfig,
-                                continuous_vs_static)
+                                RoundWindow, continuous_vs_static,
+                                round_schedule)
 
 __all__ = [
     "cluster_fedavg", "fedavg", "global_fedavg", "ClientBatch",
@@ -18,5 +19,6 @@ __all__ = [
     "flat_allreduce", "global_sync", "hierarchical_allreduce",
     "stack_for_clusters", "EFState", "compressed_global_sync",
     "dequantize_int8", "init_ef_state", "quantize_int8", "sync_bytes",
-    "ContinualHFL", "HFLResult", "HFLRunConfig", "continuous_vs_static",
+    "ContinualHFL", "HFLResult", "HFLRunConfig", "RoundWindow",
+    "continuous_vs_static", "round_schedule",
 ]

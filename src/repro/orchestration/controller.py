@@ -98,15 +98,21 @@ class LearningController:
     # -- reactions to environment / service events (paper §III last para) --
 
     def on_node_failure(self, edge_id: int) -> Deployment:
-        """An edge host died: drop it from the inventory and re-cluster."""
+        """An edge host died: drop it from the inventory and re-cluster.
+        Edge ids above the removed one shift down by one, so device
+        ``lan_edge`` references must be remapped the same way — only
+        the dead edge's devices lose their LAN edge."""
         self.inventory.edges = [e for e in self.inventory.edges
                                 if e.id != edge_id]
         for k, e in enumerate(self.inventory.edges):
             e.id = k
         for d in self.inventory.devices:
-            if d.lan_edge is not None and d.lan_edge >= len(
-                    self.inventory.edges):
+            if d.lan_edge is None:
+                continue
+            if d.lan_edge == edge_id:
                 d.lan_edge = None
+            elif d.lan_edge > edge_id:
+                d.lan_edge -= 1
         self.recluster_count += 1
         return self.deploy()
 

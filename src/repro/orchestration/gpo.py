@@ -36,6 +36,24 @@ class Inventory:
     edges: List[EdgeNode]
     unit_cost: float = 1.0           # device->non-LAN edge cost
 
+    @classmethod
+    def from_arrays(cls, lam: np.ndarray, r: np.ndarray,
+                    lan_edge: Optional[np.ndarray] = None,
+                    unit_cost: float = 1.0) -> "Inventory":
+        """Build an inventory from the array form the benchmarks use
+        (per-device rates, per-edge capacities, optional LAN edge;
+        negative LAN entries — assign-style 'no edge' markers — map to
+        None, not to a bogus zero-cost link)."""
+        devices = [DeviceNode(i, lam=float(l),
+                              lan_edge=(int(lan_edge[i])
+                                        if lan_edge is not None
+                                        and int(lan_edge[i]) >= 0
+                                        else None))
+                   for i, l in enumerate(np.asarray(lam, float))]
+        edges = [EdgeNode(j, capacity_rps=float(c))
+                 for j, c in enumerate(np.asarray(r, float))]
+        return cls(devices, edges, unit_cost=unit_cost)
+
     def to_instance(self, l: int = 2,
                     T: Optional[int] = None) -> HFLOPInstance:
         n, m = len(self.devices), len(self.edges)

@@ -2,21 +2,31 @@
 training — reproduces the paper's Fig. 7 (response times) and Fig. 8
 (end-to-end latency vs compute speedup and request-rate scaling).
 
-Each device emits a Poisson request stream at rate lambda_i.  Requests are
-routed by rules R1-R3 (``repro.routing.rules``); edges have finite
-concurrent-processing capacity derived from r_j; the cloud is infinite.
+Each device emits a Poisson request stream at rate lambda_i (shared
+generator: ``serving.workload.poisson_requests``).  Requests are routed
+by rules R1-R3 (``repro.routing.rules``); edges have finite concurrent-
+processing capacity derived from r_j; the cloud is infinite.
+
+Since the co-simulation subsystem landed, this module is a thin
+inference-only configuration of the shared event core
+(``repro.sim.events``): :class:`RequestProcessor` holds the routing +
+service logic, and :func:`simulate` wires it to a coin-flip training
+signal (``busy_fraction``).  ``repro.sim.cosim`` reuses the same
+processor but drives the busy flag from an actual training round
+timeline and the service times through an interference model.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.topology import ClusterTopology
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import EdgeState, RouteDecision, route_request
+from repro.serving.workload import poisson_requests
+from repro.sim.events import Event, EventKind, Simulation
 
 
 @dataclass
@@ -33,12 +43,36 @@ class RequestLog:
     def std_latency(self) -> float:
         return float(np.std(self.latency_ms))
 
+    def percentile_latency(self, p: float) -> float:
+        """p-th percentile of end-to-end latency in ms (p in [0, 100])."""
+        return float(np.percentile(self.latency_ms, p))
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p95/p99 summary (``tier_fractions``-style dict, in ms)."""
+        return {f"p{p:g}": self.percentile_latency(p)
+                for p in (50, 95, 99)}
+
     def tier_fractions(self) -> Dict[str, float]:
         names = {0: "device", 1: "edge", 2: "cloud"}
         out = {}
         for k, name in names.items():
             out[name] = float(np.mean(self.tier == k))
         return out
+
+    def windowed_percentile(self, window_s: float, p: float = 95.0,
+                            ) -> np.ndarray:
+        """(n_windows, 2) array of [window start, p-th percentile latency]
+        — the latency timeline the reactive monitors and examples plot."""
+        if self.t.size == 0:
+            return np.zeros((0, 2))
+        edges = np.arange(0.0, float(self.t.max()) + window_s, window_s)
+        rows = []
+        for lo in edges:
+            m = (self.t >= lo) & (self.t < lo + window_s)
+            if np.any(m):
+                rows.append((lo, float(np.percentile(self.latency_ms[m],
+                                                     p))))
+        return np.asarray(rows)
 
 
 @dataclass
@@ -50,67 +84,138 @@ class SimConfig:
     latency: LatencyModel = field(default_factory=LatencyModel)
 
 
-def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:
-    rng = np.random.default_rng(cfg.seed)
-    lat = cfg.latency
-    n = topo.n_devices
-    rates = topo.lam * cfg.rate_scale
+class RequestProcessor:
+    """Routing + service logic for ``REQUEST_ARRIVAL`` events on the
+    event core — shared between the inference-only simulator below and
+    the training–inference co-simulation (``repro.sim.cosim``).
 
-    edges: Dict[int, EdgeState] = {}
-    for j in topo.open_edges:
-        # capacity is a property of the edge host — it does NOT scale with
-        # the request-rate multiplier (that is the point of Fig. 8b)
-        edges[int(j)] = EdgeState(capacity_rps=float(topo.r[j])
-                                  if topo.r.size else np.inf)
+    Pluggable policies:
+      ``busy_fn(device, t)``          -> is the device training right now?
+      ``service_fn(device, dec, occ)`` -> service time in ms (defaults to
+                                          the latency model's ``infer_ms``)
+      ``extra_ms_fn(dec, t)``         -> additive penalty (reconfiguration
+                                          cost windows in the co-sim)
+    """
 
-    # generate arrivals
-    arrivals = []
-    for i in range(n):
-        if rates[i] <= 0:
-            continue
-        t = 0.0
-        while True:
-            t += rng.exponential(1.0 / rates[i])
-            if t > cfg.duration_s:
-                break
-            arrivals.append((t, i))
-    arrivals.sort()
+    def __init__(self, topo: ClusterTopology, rng: np.random.Generator,
+                 latency: Optional[LatencyModel] = None,
+                 busy_fn: Optional[Callable[[int, float], bool]] = None,
+                 service_fn: Optional[
+                     Callable[[int, RouteDecision, int], float]] = None,
+                 extra_ms_fn: Optional[
+                     Callable[[RouteDecision, float], float]] = None):
+        self.rng = rng
+        self.lat = latency if latency is not None else LatencyModel()
+        self.busy_fn = busy_fn or (lambda i, t: False)
+        self.service_fn = service_fn
+        self.extra_ms_fn = extra_ms_fn
+        self.edges: Dict[int, EdgeState] = {}
+        self.set_topology(topo)
+        self._t: List[float] = []
+        self._dev: List[int] = []
+        self._tier: List[int] = []
+        self._rule: List[str] = []
+        self._lat: List[float] = []
+        self._tier_code = {"device": 0, "edge": 1, "cloud": 2}
 
-    # event heap for service completions: (time, edge_id)
-    completions: List = []
-    out_t, out_dev, out_tier, out_rule, out_lat = [], [], [], [], []
-    tier_code = {"device": 0, "edge": 1, "cloud": 2}
+    def set_topology(self, topo: ClusterTopology) -> None:
+        """(Re)build admission state — used at start and when the
+        reactive loop swaps in a re-clustered deployment.  In-flight
+        completions keep a reference to their old ``EdgeState`` (the
+        event payload), so they drain harmlessly after a swap."""
+        self.topo = topo
+        self.edges = {}
+        for j in topo.open_edges:
+            # capacity is a property of the edge host — it does NOT scale
+            # with the request-rate multiplier (the point of Fig. 8b)
+            self.edges[int(j)] = EdgeState(
+                capacity_rps=float(topo.r[j]) if topo.r.size else np.inf)
 
-    for (t, i) in arrivals:
-        while completions and completions[0][0] <= t:
-            _, j = heapq.heappop(completions)
-            edges[j].in_service -= 1
-        busy = rng.uniform() < cfg.busy_fraction
-        dec = route_request(i, busy, topo.assign, edges, now=t)
+    def bind(self, sim: Simulation) -> None:
+        sim.on(EventKind.REQUEST_ARRIVAL, self.on_arrival)
+        sim.on(EventKind.REQUEST_COMPLETION, self.on_completion)
+
+    def fail_edge(self, edge_id: int) -> None:
+        """Edge host died: zero capacity so R3 overflows to the cloud."""
+        st = self.edges.get(int(edge_id))
+        if st is not None:
+            st.capacity_rps = 0.0
+            st.tokens = 0.0
+
+    def on_completion(self, sim: Simulation, ev: Event) -> None:
+        ev.payload.in_service -= 1
+
+    def on_arrival(self, sim: Simulation, ev: Event) -> None:
+        t, i = ev.t, ev.node
+        busy = self.busy_fn(i, t)
+        dec = route_request(i, busy, self.topo.assign, self.edges, now=t)
         # calibrated mode: service time reflects how many requests the
         # chosen replica already has in flight (constant model ignores it)
-        occ = edges[dec.edge].in_service if dec.tier == "edge" else 0
-        service = lat.infer_ms(dec.tier, occupancy=occ)
+        occ = self.edges[dec.edge].in_service if dec.tier == "edge" else 0
+        service = (self.service_fn(i, dec, occ) if self.service_fn
+                   else self.lat.infer_ms(dec.tier, occupancy=occ))
         if dec.tier == "edge":
-            edges[dec.edge].admit(t)
-            heapq.heappush(completions, (t + service / 1000.0, dec.edge))
-            net = float(lat.rtt("edge", rng))
+            st = self.edges[dec.edge]
+            st.admit(t)
+            sim.schedule(t + service / 1000.0, EventKind.REQUEST_COMPLETION,
+                         node=dec.edge, payload=st)
+            net = float(self.lat.rtt("edge", self.rng))
         elif dec.tier == "cloud":
-            net = float(lat.rtt("cloud", rng))
+            net = float(self.lat.rtt("cloud", self.rng))
             if dec.hops == 2:        # forwarded via the edge (R3 overflow)
-                net += float(lat.rtt("edge", rng))
+                net += float(self.lat.rtt("edge", self.rng))
         else:
-            net = float(lat.rtt("device", rng))
-        out_t.append(t)
-        out_dev.append(i)
-        out_tier.append(tier_code[dec.tier])
-        out_rule.append(dec.rule)
-        out_lat.append(net + service)
+            net = float(self.lat.rtt("device", self.rng))
+        if self.extra_ms_fn is not None:
+            net += float(self.extra_ms_fn(dec, t))
+        self._t.append(t)
+        self._dev.append(i)
+        self._tier.append(self._tier_code[dec.tier])
+        self._rule.append(dec.rule)
+        self._lat.append(net + service)
 
-    return RequestLog(
-        t=np.asarray(out_t), device=np.asarray(out_dev, int),
-        tier=np.asarray(out_tier, int), rule=out_rule,
-        latency_ms=np.asarray(out_lat))
+    def recent_percentile(self, now: float, window_s: float, p: float,
+                          min_requests: int = 1,
+                          max_lookback: int = 4096) -> Optional[float]:
+        """p-th latency percentile over requests arriving in
+        ``[now - window_s, now]`` — the latency monitors' telemetry.
+        None when the window holds fewer than ``min_requests``.
+
+        At most the newest ``max_lookback`` requests are scanned (the
+        monitor fires every few simulated seconds; rescanning the full
+        history each tick would be quadratic).  At arrival rates above
+        ``max_lookback / window_s`` req/s the estimate therefore covers
+        only the newest part of the window — raise ``max_lookback`` if
+        that bias matters for your scenario."""
+        ts = np.asarray(self._t[-max_lookback:])
+        if ts.size == 0:
+            return None
+        m = ts >= now - window_s
+        if int(m.sum()) < min_requests:
+            return None
+        return float(np.percentile(np.asarray(self._lat[-max_lookback:])[m],
+                                   p))
+
+    def log(self) -> RequestLog:
+        return RequestLog(
+            t=np.asarray(self._t), device=np.asarray(self._dev, int),
+            tier=np.asarray(self._tier, int), rule=self._rule,
+            latency_ms=np.asarray(self._lat))
+
+
+def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:
+    rng = np.random.default_rng(cfg.seed)
+    arrivals = poisson_requests(topo.lam * cfg.rate_scale, cfg.duration_s,
+                                rng)
+    sim = Simulation()
+    proc = RequestProcessor(
+        topo, rng, latency=cfg.latency,
+        busy_fn=lambda i, t: rng.uniform() < cfg.busy_fraction)
+    proc.bind(sim)
+    for ev in arrivals:
+        sim.schedule(ev.t, EventKind.REQUEST_ARRIVAL, node=ev.device)
+    sim.run()
+    return proc.log()
 
 
 def compare_methods(inst, assigns: Dict[str, np.ndarray], cfg: SimConfig,

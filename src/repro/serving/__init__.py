@@ -1,13 +1,36 @@
-from repro.serving.engine import EngineMeasurement, ServeEngine, bucket_len
-from repro.serving.replica import (DEFAULT_TIERS, ReplicaPool, TierSpec,
-                                   lm_tiers)
-from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
-                                     ScheduleStats, requests_from_events)
+"""Tiered serving subsystem.
+
+Workload generation (numpy-only) is imported eagerly; the jax-backed
+engine/replica/scheduler are lazy (PEP 562) so that numpy-only
+consumers — the routing simulator sources its Poisson arrivals from
+``serving.workload`` — don't pay (or require) the jax import.
+"""
+import importlib
+
 from repro.serving.workload import (RequestEvent, batched_arrivals,
                                     poisson_requests)
 
-__all__ = ["EngineMeasurement", "ServeEngine", "bucket_len",
-           "DEFAULT_TIERS", "ReplicaPool", "TierSpec", "lm_tiers",
-           "ContinuousBatchingScheduler", "Request", "ScheduleStats",
-           "requests_from_events", "RequestEvent", "batched_arrivals",
-           "poisson_requests"]
+_LAZY = {
+    "EngineMeasurement": "repro.serving.engine",
+    "ServeEngine": "repro.serving.engine",
+    "bucket_len": "repro.serving.engine",
+    "DEFAULT_TIERS": "repro.serving.replica",
+    "ReplicaPool": "repro.serving.replica",
+    "TierSpec": "repro.serving.replica",
+    "lm_tiers": "repro.serving.replica",
+    "ContinuousBatchingScheduler": "repro.serving.scheduler",
+    "Request": "repro.serving.scheduler",
+    "ScheduleStats": "repro.serving.scheduler",
+    "requests_from_events": "repro.serving.scheduler",
+}
+
+__all__ = ["RequestEvent", "batched_arrivals",
+           "poisson_requests"] + list(_LAZY)
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(module), name)

@@ -4,7 +4,7 @@ paper's request model and the TPU decode step."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Tuple, Union
 
 import numpy as np
 
@@ -16,8 +16,14 @@ class RequestEvent:
 
 
 def poisson_requests(lam: np.ndarray, duration_s: float,
-                     seed: int = 0) -> List[RequestEvent]:
-    rng = np.random.default_rng(seed)
+                     seed: Union[int, np.random.Generator] = 0,
+                     ) -> List[RequestEvent]:
+    """Per-device Poisson arrival streams.  ``seed`` may be an existing
+    ``np.random.Generator`` so callers that draw more randomness after
+    the arrivals (e.g. the event simulator's routing/RTT draws) share
+    one deterministic stream."""
+    rng = (seed if isinstance(seed, np.random.Generator)
+           else np.random.default_rng(seed))
     events: List[RequestEvent] = []
     for i, rate in enumerate(np.asarray(lam)):
         if rate <= 0:

@@ -1,0 +1,31 @@
+"""Training–inference co-simulation subsystem.
+
+The event core is imported eagerly; the co-sim engine and reactive loop
+are lazy (PEP 562) because they import ``repro.routing.simulator``,
+which itself builds on ``repro.sim.events`` — eager imports here would
+close that cycle.
+"""
+import importlib
+
+from repro.sim.events import Event, EventKind, EventQueue, Simulation
+
+_LAZY = {
+    "CoSim": "repro.sim.cosim",
+    "CoSimConfig": "repro.sim.cosim",
+    "CoSimResult": "repro.sim.cosim",
+    "InterferenceConfig": "repro.sim.interference",
+    "InterferenceModel": "repro.sim.interference",
+    "AccuracyModel": "repro.sim.reactive",
+    "ReactiveLoop": "repro.sim.reactive",
+    "ReactivePolicy": "repro.sim.reactive",
+}
+
+__all__ = ["Event", "EventKind", "EventQueue", "Simulation"] + list(_LAZY)
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(module), name)

@@ -1,0 +1,289 @@
+"""Unified training–inference co-simulation.
+
+Runs continual HFL training rounds and inference serving on the *same*
+per-node compute timeline: the round schedule (``fl.hierarchy.
+round_schedule``) becomes typed events on the shared event core, each
+participating device's local epochs mark it busy (rule R1 offloads its
+requests) and claim compute, aggregation uploads occupy the edges (and
+the cloud on global rounds), and the interference model stretches
+service times for whatever the node still serves.  Inference requests
+ride the same heap via the ``RequestProcessor`` that also powers the
+inference-only ``routing.simulator``.
+
+An optional reactive loop (``sim.reactive.ReactiveLoop``) watches the
+telemetry this engine emits and drives the learning controller's
+``on_node_failure`` / ``on_capacity_change`` / ``on_accuracy_alarm``
+hooks mid-simulation, swapping re-clustered deployments back in with a
+modeled replica-migration cost.
+
+Determinism: all randomness flows through one ``np.random.Generator``
+seeded from ``CoSimConfig.seed`` (device speed factors first, then the
+arrival streams, then per-request RTT draws in event order), so the
+same seed yields an identical event trace and request log.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.topology import ClusterTopology
+from repro.fl.hierarchy import RoundWindow
+from repro.routing.latency import LatencyModel
+from repro.routing.rules import RouteDecision
+from repro.routing.simulator import RequestLog, RequestProcessor
+from repro.serving.workload import poisson_requests
+from repro.sim.events import Event, EventKind, Simulation
+from repro.sim.interference import InterferenceConfig, InterferenceModel
+
+
+@dataclass
+class CoSimConfig:
+    duration_s: float = 300.0
+    seed: int = 0
+    rate_scale: float = 1.0
+    latency: LatencyModel = field(default_factory=LatencyModel)
+    interference: InterferenceConfig = field(
+        default_factory=InterferenceConfig)
+    speed_spread: float = 0.3        # device heterogeneity: fastest device
+    #                                  runs an epoch in (1-spread) x nominal
+    telemetry_s: float = 2.0         # reactive monitor tick period
+    reconfig_s: float = 5.0          # replica migration duration
+    reconfig_penalty_ms: float = 25.0  # per-request cost while migrating
+    record_trace: bool = True
+
+
+@dataclass
+class CoSimResult:
+    log: RequestLog
+    trace: List[Tuple[float, str, int]]
+    rounds_completed: int
+    reconfig_times: List[float]
+    mse_series: np.ndarray           # (k, 2) [t, modeled val MSE]
+    actions: List[Tuple[float, str]]  # reactive-loop decisions
+
+
+class CoSim:
+    """One co-simulation run over a topology.  ``schedule`` is the
+    training timeline (None -> serving only); ``reactive`` an optional
+    ``ReactiveLoop`` bound to a ``LearningController``."""
+
+    def __init__(self, topo: ClusterTopology, cfg: CoSimConfig,
+                 schedule: Optional[Sequence[RoundWindow]] = None,
+                 reactive=None):
+        self.cfg = cfg
+        self.sim = Simulation(record_trace=cfg.record_trace)
+        self.rng = np.random.default_rng(cfg.seed)
+        n = topo.n_devices
+        # per-device epoch-time multiplier in [1-spread, 1]: every device
+        # finishes its local epochs by the round's nominal compute_end
+        self.speed = 1.0 - cfg.speed_spread * self.rng.random(n)
+        self.interference = InterferenceModel(cfg.latency, cfg.interference)
+        self.proc = RequestProcessor(
+            topo, self.rng, latency=cfg.latency, busy_fn=self._busy,
+            service_fn=self.interference.service_ms,
+            extra_ms_fn=self._reconfig_penalty)
+        self.proc.bind(self.sim)
+
+        self._busy_count = np.zeros(n, dtype=int)
+        self._epochs_left: Dict[Tuple[int, int], np.ndarray] = {}
+        self._active_rounds = 0
+        self._active_aggs: Set[Tuple[int, int]] = set()
+        self._sched_count = 0
+        self.rounds_completed = 0
+        self.last_round_end = -math.inf
+        self.reconfig_until = -math.inf
+        self.reconfig_times: List[float] = []
+        self.reactive = reactive
+
+        s = self.sim
+        s.on(EventKind.ROUND_START, self._on_round_start)
+        s.on(EventKind.EPOCH_START, self._on_epoch_start)
+        s.on(EventKind.EPOCH_END, self._on_epoch_end)
+        s.on(EventKind.AGG_START, self._on_agg_start)
+        s.on(EventKind.AGG_END, self._on_agg_end)
+        s.on(EventKind.ROUND_END, self._on_round_end)
+        s.on(EventKind.NODE_FAILURE,
+             lambda sim, ev: self.proc.fail_edge(ev.node))
+        s.on(EventKind.CAPACITY_CHANGE, self._on_capacity_change)
+        s.on(EventKind.RECONFIG_END, self._on_reconfig_end)
+
+        for ev in poisson_requests(topo.lam * cfg.rate_scale,
+                                   cfg.duration_s, self.rng):
+            s.schedule(ev.t, EventKind.REQUEST_ARRIVAL, node=ev.device)
+        if schedule is not None:
+            self.add_training(schedule)
+        if reactive is not None:
+            reactive.bind(self)
+
+    # -- environment / workload injection -----------------------------------
+
+    def add_training(self, windows: Sequence[RoundWindow]) -> int:
+        """Schedule a training burst: round/epoch/aggregation events for
+        every window.  Returns the schedule id (sources in the
+        interference model are tagged with it, so overlapping bursts
+        compose instead of clobbering each other)."""
+        sid = self._sched_count
+        self._sched_count += 1
+        for w in windows:
+            self.sim.schedule(w.start, EventKind.ROUND_START,
+                              payload=(sid, w))
+            self.sim.schedule(w.compute_end, EventKind.AGG_START,
+                              payload=(sid, w))
+            self.sim.schedule(w.upload_end, EventKind.AGG_END,
+                              payload=(sid, w))
+            self.sim.schedule(w.upload_end, EventKind.ROUND_END,
+                              payload=(sid, w))
+        return sid
+
+    def schedule_failure(self, t: float, edge_id: int) -> None:
+        self.sim.schedule(t, EventKind.NODE_FAILURE, node=edge_id)
+
+    def schedule_capacity_change(self, t: float, edge_id: int,
+                                 new_rps: float) -> None:
+        self.sim.schedule(t, EventKind.CAPACITY_CHANGE, node=edge_id,
+                          payload=float(new_rps))
+
+    def schedule_drift(self, t: float, drift_mse: Optional[float] = None,
+                       ) -> None:
+        self.sim.schedule(t, EventKind.DRIFT_ONSET, payload=drift_mse)
+
+    # -- training timeline handlers -----------------------------------------
+
+    def _on_round_start(self, sim: Simulation, ev: Event) -> None:
+        sid, w = ev.payload
+        self._active_rounds += 1
+        nominal = (w.compute_end - w.start) / max(w.local_epochs, 1)
+        assign = self.proc.topo.assign
+        participants = np.nonzero(assign >= 0)[0]
+        if participants.size == 0:   # flat FL: every device trains
+            participants = np.arange(len(assign))
+        left = np.zeros(len(assign), dtype=int)
+        for i in participants:
+            e_i = nominal * self.speed[i]
+            for k in range(w.local_epochs):
+                sim.schedule(w.start + k * e_i, EventKind.EPOCH_START,
+                             node=int(i), payload=(sid, w))
+                sim.schedule(w.start + (k + 1) * e_i, EventKind.EPOCH_END,
+                             node=int(i), payload=(sid, w))
+            left[i] = w.local_epochs
+        self._epochs_left[(sid, w.index)] = left
+
+    def _on_epoch_start(self, sim: Simulation, ev: Event) -> None:
+        i = ev.node
+        self._busy_count[i] += 1
+        self.interference.set_demand(("device", i), "epoch",
+                                     self.cfg.interference.device_train_share)
+
+    def _on_epoch_end(self, sim: Simulation, ev: Event) -> None:
+        sid, w = ev.payload
+        i = ev.node
+        self._busy_count[i] -= 1
+        left = self._epochs_left[(sid, w.index)]
+        left[i] -= 1
+        if self._busy_count[i] == 0:
+            self.interference.set_demand(("device", i), "epoch", 0.0)
+            if left[i] == 0:
+                # epochs done, round still open: residual work (checkpoint,
+                # next-window data prep) degrades on-device serving
+                self.interference.set_demand(
+                    ("device", i), f"res{sid}:{w.index}",
+                    self.cfg.interference.device_residual_share)
+
+    def _on_agg_start(self, sim: Simulation, ev: Event) -> None:
+        sid, w = ev.payload
+        self._active_aggs.add((sid, w.index))
+        share = self.cfg.interference.edge_agg_share
+        for j in self.proc.edges:
+            self.interference.set_demand(("edge", j), f"agg{sid}:{w.index}",
+                                         share)
+        if w.is_global:
+            self.interference.set_demand(("cloud", 0),
+                                         f"agg{sid}:{w.index}",
+                                         self.cfg.interference.
+                                         cloud_agg_share)
+
+    def _on_agg_end(self, sim: Simulation, ev: Event) -> None:
+        sid, w = ev.payload
+        self._active_aggs.discard((sid, w.index))
+        src = f"agg{sid}:{w.index}"
+        for j in self.proc.edges:
+            self.interference.set_demand(("edge", j), src, 0.0)
+        self.interference.set_demand(("cloud", 0), src, 0.0)
+
+    def _on_round_end(self, sim: Simulation, ev: Event) -> None:
+        sid, w = ev.payload
+        self._active_rounds -= 1
+        src = f"res{sid}:{w.index}"
+        for i in range(len(self._busy_count)):
+            self.interference.set_demand(("device", i), src, 0.0)
+        self._epochs_left.pop((sid, w.index), None)
+        self.rounds_completed += 1
+        self.last_round_end = sim.now
+
+    def _on_capacity_change(self, sim: Simulation, ev: Event) -> None:
+        """Apply the new rate to the edge's admission state even without
+        a reactive loop (which would additionally re-cluster): the edge
+        host genuinely got slower/faster, reactions or not."""
+        st = self.proc.edges.get(int(ev.node))
+        if st is not None:
+            st.capacity_rps = float(ev.payload)
+            st.tokens = min(st.tokens, st.capacity_rps * st.burst_s)
+
+    # -- reactive-deployment plumbing ---------------------------------------
+
+    def apply_deployment(self, deployment) -> None:
+        """Swap in a re-clustered deployment mid-simulation, paying a
+        modeled reconfiguration cost: replicas migrate for
+        ``reconfig_s`` seconds during which edges carry migration load
+        and every edge-touching request pays ``reconfig_penalty_ms``."""
+        t = self.sim.now
+        self.proc.set_topology(deployment.topology)
+        # demands were keyed by old edge ids: rebuild edge-tier state
+        self.interference.clear_tier("edge")
+        share = self.cfg.interference.edge_agg_share
+        for sid, idx in self._active_aggs:
+            for j in self.proc.edges:
+                self.interference.set_demand(("edge", j),
+                                             f"agg{sid}:{idx}", share)
+        for j in self.proc.edges:
+            self.interference.set_demand(
+                ("edge", j), "migration",
+                self.cfg.interference.migration_share)
+        self.reconfig_until = t + self.cfg.reconfig_s
+        self.reconfig_times.append(t)
+        self.sim.schedule(self.reconfig_until, EventKind.RECONFIG_END)
+
+    def _on_reconfig_end(self, sim: Simulation, ev: Event) -> None:
+        if sim.now >= self.reconfig_until:
+            self.interference.clear_tier("edge", "migration")
+
+    # -- pluggable policies for the request processor -----------------------
+
+    @property
+    def training_active(self) -> bool:
+        return self._active_rounds > 0
+
+    def _busy(self, i: int, t: float) -> bool:
+        return self._busy_count[i] > 0
+
+    def _reconfig_penalty(self, dec: RouteDecision, t: float) -> float:
+        if t < self.reconfig_until and dec.edge is not None:
+            return self.cfg.reconfig_penalty_ms
+        return 0.0
+
+    # -- run ----------------------------------------------------------------
+
+    def run(self) -> CoSimResult:
+        self.sim.run(until=self.cfg.duration_s)
+        mse = (np.asarray(self.reactive.mse_series)
+               if self.reactive is not None and self.reactive.mse_series
+               else np.zeros((0, 2)))
+        actions = (list(self.reactive.actions)
+                   if self.reactive is not None else [])
+        return CoSimResult(log=self.proc.log(), trace=list(self.sim.trace),
+                           rounds_completed=self.rounds_completed,
+                           reconfig_times=list(self.reconfig_times),
+                           mse_series=mse, actions=actions)

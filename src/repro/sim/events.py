@@ -1,0 +1,116 @@
+"""Discrete-event core of the training–inference co-simulation.
+
+One heap-based clock, typed events, and handler dispatch.  Everything
+that "happens" on the continuum — a request arriving, a local epoch
+starting on a device, an aggregation upload occupying an edge, a node
+dying, concept drift setting in — is an :class:`Event` on the same
+timeline, so training and inference contend for the same per-node
+compute instead of being simulated in isolation.
+
+Determinism contract: events at equal timestamps are ordered by
+``EventKind`` value (completions and state changes apply before the
+requests that must observe them), then by insertion order.  Handlers
+run in registration order.  Given the same seed and schedule, two runs
+produce identical event traces — asserted in ``tests/test_cosim.py``.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class EventKind(IntEnum):
+    """Typed simulation events.  The numeric value is the tie-break
+    priority at equal timestamps: lower values are processed first, so
+    a completion frees its slot, environment and training state changes
+    apply, and only then do same-instant arrivals observe the world."""
+    REQUEST_COMPLETION = 0   # a served request leaves its replica
+    NODE_FAILURE = 1         # an edge host dies
+    CAPACITY_CHANGE = 2      # an edge host's serving capacity shifts
+    DRIFT_ONSET = 3          # concept drift begins in the data stream
+    RECONFIG_END = 4         # replica migration / re-deploy finishes
+    ROUND_START = 5          # an HFL training round begins
+    EPOCH_END = 6            # a device finishes one local epoch
+    EPOCH_START = 7          # a device starts one local epoch
+    AGG_START = 8            # aggregation upload window opens (edges busy)
+    AGG_END = 9              # aggregation upload window closes
+    ROUND_END = 10           # the training round is over
+    TELEMETRY = 11           # periodic monitor tick (reactive loop)
+    REQUEST_ARRIVAL = 12     # an inference request arrives
+
+
+@dataclass(frozen=True)
+class Event:
+    t: float
+    kind: EventKind
+    node: int = -1           # device/edge id, -1 when not node-scoped
+    payload: Any = None
+    seq: int = 0             # insertion order (unique, the final tie-break)
+
+
+class EventQueue:
+    """Min-heap of events keyed by ``(t, kind, seq)``.  ``seq`` is unique,
+    so heap entries never compare payloads."""
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, int, Event]] = []
+        self._seq = 0
+
+    def push(self, t: float, kind: EventKind, node: int = -1,
+             payload: Any = None) -> Event:
+        ev = Event(t=float(t), kind=kind, node=int(node), payload=payload,
+                   seq=self._seq)
+        heapq.heappush(self._heap, (ev.t, int(kind), ev.seq, ev))
+        self._seq += 1
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[3]
+
+    def peek_t(self) -> float:
+        return self._heap[0][0] if self._heap else math.inf
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+Handler = Callable[["Simulation", Event], None]
+
+
+@dataclass
+class Simulation:
+    """The clock + dispatcher.  Modules (request processor, training
+    timeline, interference model, reactive loop) register handlers with
+    :meth:`on` and schedule follow-up events from inside handlers."""
+    record_trace: bool = False
+    queue: EventQueue = field(default_factory=EventQueue)
+    now: float = 0.0
+    handlers: Dict[EventKind, List[Handler]] = field(default_factory=dict)
+    trace: List[Tuple[float, str, int]] = field(default_factory=list)
+
+    def on(self, kind: EventKind, handler: Handler) -> None:
+        self.handlers.setdefault(kind, []).append(handler)
+
+    def schedule(self, t: float, kind: EventKind, node: int = -1,
+                 payload: Any = None) -> Event:
+        return self.queue.push(t, kind, node=node, payload=payload)
+
+    def run(self, until: float = math.inf) -> int:
+        """Process events in order until the queue drains or the next
+        event lies beyond ``until`` (which stays queued)."""
+        processed = 0
+        while self.queue and self.queue.peek_t() <= until:
+            ev = self.queue.pop()
+            self.now = ev.t
+            if self.record_trace:
+                self.trace.append((round(ev.t, 9), ev.kind.name, ev.node))
+            for h in self.handlers.get(ev.kind, ()):
+                h(self, ev)
+            processed += 1
+        return processed

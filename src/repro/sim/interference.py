@@ -1,0 +1,104 @@
+"""Training–inference interference: per-node compute shared between
+training FLOPs and in-flight requests.
+
+Every continuum node (device i, edge j, the cloud) has one normalized
+unit of compute.  Training phases claim a share of it — a device
+mid-epoch spends ``device_train_share`` on gradient steps, an edge
+mid-aggregation spends ``edge_agg_share`` averaging models, the cloud
+spends ``cloud_agg_share`` during global rounds — and whatever serving
+the node still does time-shares the remainder, so service times stretch
+by ``1 / (1 - demand)``.
+
+The base per-tier service time comes from any ``LatencyModel``,
+including a :class:`~repro.routing.latency.CalibratedLatencyModel`
+built from real engine timings (``ReplicaPool.measure()``), whose
+occupancy-dependent slowdown composes multiplicatively with the
+training stretch: an edge that is both oversubscribed *and* aggregating
+is slow for both reasons.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.routing.latency import LatencyModel
+from repro.routing.rules import RouteDecision
+
+NodeKey = Tuple[str, int]            # ("device", i) | ("edge", j) | ("cloud", 0)
+
+
+@dataclass(frozen=True)
+class InterferenceConfig:
+    device_train_share: float = 0.85   # compute share of a local epoch
+    device_residual_share: float = 0.35  # post-epoch round work (ckpt/prep)
+    edge_agg_share: float = 0.6        # share while aggregating uploads
+    cloud_agg_share: float = 0.3       # share during a global aggregation
+    migration_share: float = 0.5       # share while replicas migrate
+    floor: float = 0.05                # serving never starves below this
+
+
+class InterferenceModel:
+    """Tracks per-node training demand as named components (so an edge
+    can simultaneously aggregate *and* host a replica migration) and
+    stretches the latency model's service times accordingly."""
+
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 cfg: InterferenceConfig = InterferenceConfig()):
+        self.lat = latency if latency is not None else LatencyModel()
+        self.cfg = cfg
+        self._demand: Dict[NodeKey, Dict[str, float]] = {}
+
+    # -- demand bookkeeping -------------------------------------------------
+
+    def set_demand(self, node: NodeKey, source: str, share: float) -> None:
+        comp = self._demand.setdefault(node, {})
+        if share <= 0.0:
+            comp.pop(source, None)
+        else:
+            comp[source] = float(share)
+
+    def clear_tier(self, tier: str, source: Optional[str] = None) -> None:
+        for node, comp in self._demand.items():
+            if node[0] != tier:
+                continue
+            if source is None:
+                comp.clear()
+            else:
+                comp.pop(source, None)
+
+    def demand(self, node: NodeKey) -> float:
+        total = sum(self._demand.get(node, {}).values())
+        return min(total, 1.0 - self.cfg.floor)
+
+    # -- service times ------------------------------------------------------
+
+    def stretch(self, node: NodeKey) -> float:
+        """Service-time multiplier from compute time-sharing."""
+        return 1.0 / max(1.0 - self.demand(node), self.cfg.floor)
+
+    def service_ms(self, device: int, dec: RouteDecision,
+                   occupancy: int = 0) -> float:
+        """Drop-in ``service_fn`` for the request processor: base
+        per-tier service (occupancy-aware when calibrated) stretched by
+        the serving node's current training demand."""
+        base = self.lat.infer_ms(dec.tier, occupancy=occupancy)
+        if dec.tier == "edge":
+            node: NodeKey = ("edge", int(dec.edge))
+        elif dec.tier == "cloud":
+            node = ("cloud", 0)
+        else:
+            node = ("device", int(device))
+        return base * self.stretch(node)
+
+    # -- construction from real engine timings ------------------------------
+
+    @classmethod
+    def from_measurements(cls, measurements: Mapping[str, object],
+                          cfg: InterferenceConfig = InterferenceConfig(),
+                          decode_tokens: int = 0,
+                          **kwargs) -> "InterferenceModel":
+        """Calibrate from ``ReplicaPool.measure()`` output via the
+        existing ``LatencyModel.from_measurements`` bridge."""
+        lat = LatencyModel.from_measurements(
+            measurements, decode_tokens=decode_tokens, **kwargs)
+        return cls(latency=lat, cfg=cfg)

@@ -1,0 +1,230 @@
+"""Reactive orchestration loop — closes the monitor -> controller ->
+re-deploy cycle the paper describes (§III last paragraph) inside the
+co-simulation.
+
+Monitors emit telemetry on the shared event core and drive the
+``LearningController`` hooks mid-simulation:
+
+  accuracy monitor   modeled validation MSE (drift onset ramps it up,
+                     each completed retraining round closes part of the
+                     gap) -> ``on_accuracy_alarm`` -> retraining burst
+  latency monitor    windowed p95 over the request log; sustained
+                     violations pick the bottleneck edge and call
+                     ``on_capacity_change`` with its training-degraded
+                     effective rate -> HFLOP re-clusters -> the co-sim
+                     swaps the deployment (with migration cost)
+  failure monitor    ``NODE_FAILURE`` events -> ``on_node_failure`` ->
+                     re-cluster around the dead edge
+
+All reactions are deterministic functions of the event stream, so a
+reactive run is reproducible seed-for-seed like any other.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.fl.hierarchy import round_schedule
+from repro.sim.events import Event, EventKind, Simulation
+
+
+@dataclass
+class AccuracyModel:
+    """Closed-form serving-accuracy telemetry: base MSE until drift
+    onset, then a ramp toward ``drift_mse`` over ``ramp_s`` seconds;
+    every completed retraining round multiplies the remaining gap by
+    ``1 - recovery_per_round`` (continual learning re-fits the model)."""
+    base_mse: float = 0.03
+    drift_mse: float = 0.12
+    ramp_s: float = 30.0
+    recovery_per_round: float = 0.5
+    drift_t: Optional[float] = None
+    gap_scale: float = 1.0
+
+    def on_drift(self, t: float, drift_mse: Optional[float] = None) -> None:
+        self.drift_t = t
+        self.gap_scale = 1.0
+        if drift_mse is not None:
+            self.drift_mse = float(drift_mse)
+
+    def on_round_complete(self) -> None:
+        if self.drift_t is not None:
+            self.gap_scale *= (1.0 - self.recovery_per_round)
+
+    def mse(self, t: float) -> float:
+        if self.drift_t is None or t < self.drift_t:
+            return self.base_mse
+        ramp = min((t - self.drift_t) / max(self.ramp_s, 1e-9), 1.0)
+        return self.base_mse + self.gap_scale * ramp * (self.drift_mse
+                                                        - self.base_mse)
+
+
+@dataclass
+class ReactivePolicy:
+    p95_threshold_ms: float = 40.0   # sustained p95 above this -> recluster
+    window_s: float = 10.0           # telemetry window for p95
+    min_window_requests: int = 20
+    cooldown_s: float = 30.0         # between reclusterings
+    capacity_derate: float = 0.6     # edge_agg_share estimate used when
+    #                                  reporting effective capacity
+    feasibility_slack: float = 1.05  # keep sum(r) >= slack * sum(lam)
+    burst_rounds: int = 4            # retraining burst on accuracy alarm
+    burst_local_epochs: int = 5
+    burst_epoch_s: float = 4.0
+    burst_upload_s: float = 1.5
+    restore_idle_s: float = 20.0     # training idle this long -> restore
+    #                                  nominal capacities (and re-cluster)
+
+
+class ReactiveLoop:
+    """Binds a ``LearningController`` to a running :class:`CoSim`."""
+
+    def __init__(self, controller, accuracy: Optional[AccuracyModel] = None,
+                 policy: Optional[ReactivePolicy] = None):
+        self.controller = controller
+        self.acc = accuracy if accuracy is not None else AccuracyModel()
+        self.policy = policy if policy is not None else ReactivePolicy()
+        self.mse_series: List[Tuple[float, float]] = []
+        self.actions: List[Tuple[float, str]] = []
+        self.burst_until = -math.inf
+        self.last_recluster_t = -math.inf
+        # nominal (pre-derate) capacity per edge id: derates are computed
+        # from here so repeated alarms don't compound, and capacities are
+        # restored once training goes idle
+        self._nominal_caps: dict = {}
+        self.cosim = None
+
+    def bind(self, cosim) -> None:
+        self.cosim = cosim
+        sim: Simulation = cosim.sim
+        sim.on(EventKind.TELEMETRY, self.on_telemetry)
+        sim.on(EventKind.DRIFT_ONSET, self.on_drift)
+        sim.on(EventKind.NODE_FAILURE, self.on_node_failure)
+        sim.on(EventKind.CAPACITY_CHANGE, self.on_capacity_change)
+        sim.on(EventKind.ROUND_END, self.on_round_end)
+        tick = cosim.cfg.telemetry_s
+        n_ticks = int(cosim.cfg.duration_s / tick)
+        for k in range(1, n_ticks + 1):
+            sim.schedule(k * tick, EventKind.TELEMETRY)
+
+    # -- environment events -> controller hooks -----------------------------
+
+    def on_drift(self, sim: Simulation, ev: Event) -> None:
+        self.acc.on_drift(ev.t, drift_mse=ev.payload)
+        self.actions.append((ev.t, "drift onset"))
+
+    def on_round_end(self, sim: Simulation, ev: Event) -> None:
+        self.acc.on_round_complete()
+
+    def on_node_failure(self, sim: Simulation, ev: Event) -> None:
+        failed = int(ev.node)
+        # edge ids above the removed one shift down, like lan_edge refs
+        self._nominal_caps = {(j - 1 if j > failed else j): cap
+                              for j, cap in self._nominal_caps.items()
+                              if j != failed}
+        dep = self.controller.on_node_failure(int(ev.node))
+        self.cosim.apply_deployment(dep)
+        self.actions.append((ev.t, f"edge {ev.node} failed -> reclustered "
+                             f"to {len(dep.topology.open_edges)} edges"))
+
+    def on_capacity_change(self, sim: Simulation, ev: Event) -> None:
+        # a real hardware capacity change supersedes any derated nominal
+        # we recorded — _restore_capacity must not revert it later
+        self._nominal_caps.pop(int(ev.node), None)
+        dep = self.controller.on_capacity_change(int(ev.node),
+                                                 float(ev.payload))
+        self.cosim.apply_deployment(dep)
+        self.actions.append((ev.t, f"edge {ev.node} capacity -> "
+                             f"{float(ev.payload):.2f} rps, reclustered"))
+
+    # -- telemetry tick ------------------------------------------------------
+
+    def on_telemetry(self, sim: Simulation, ev: Event) -> None:
+        t = ev.t
+        mse = self.acc.mse(t)
+        self.mse_series.append((t, mse))
+        if (self.controller.on_accuracy_alarm(mse)
+                and t >= self.burst_until):
+            self._trigger_retraining(t, mse)
+        p95 = self._window_p95(t)
+        if (p95 is not None and p95 > self.policy.p95_threshold_ms
+                and t - self.last_recluster_t >= self.policy.cooldown_s):
+            self._recluster_for_latency(t, p95)
+        elif (self._nominal_caps and not self.cosim.training_active
+                and t - self.cosim.last_round_end
+                >= self.policy.restore_idle_s
+                and t - self.last_recluster_t >= self.policy.cooldown_s):
+            self._restore_capacity(t)
+
+    def _trigger_retraining(self, t: float, mse: float) -> None:
+        p = self.policy
+        burst = round_schedule(p.burst_rounds, l=self.controller.l,
+                               local_epochs=p.burst_local_epochs,
+                               epoch_s=p.burst_epoch_s,
+                               upload_s=p.burst_upload_s, start_s=t)
+        self.cosim.add_training(burst)
+        self.burst_until = burst[-1].end
+        self.actions.append((t, f"accuracy alarm (mse={mse:.3f}) -> "
+                             f"retraining burst of {p.burst_rounds} rounds"))
+
+    def _window_p95(self, t: float) -> Optional[float]:
+        return self.cosim.proc.recent_percentile(
+            t, self.policy.window_s, 95,
+            min_requests=self.policy.min_window_requests)
+
+    def _recluster_for_latency(self, t: float, p95: float) -> None:
+        """Pick the busiest edge in the window and report its effective
+        (training-degraded) capacity to the controller, which re-solves
+        HFLOP — load moves off the bottleneck."""
+        proc = self.cosim.proc
+        edges = proc.edges
+        if not edges:
+            return
+        # bottleneck = edge with the highest assigned request load
+        loads = self.cosim.proc.topo.cluster_loads()
+        if not loads:
+            return
+        bottleneck = max(loads, key=loads.get)
+        inv_edges = self.controller.inventory.edges
+        if bottleneck >= len(inv_edges):
+            return
+        cur = inv_edges[bottleneck].capacity_rps
+        # derate from the NOMINAL capacity, not the current value —
+        # repeated alarms must not compound toward zero
+        nominal = self._nominal_caps.get(bottleneck, cur)
+        eff = nominal * (1.0 - self.policy.capacity_derate)
+        # never report a capacity that makes the instance infeasible
+        lam_total = sum(d.lam for d in self.controller.inventory.devices)
+        others = sum(e.capacity_rps for e in inv_edges) - cur
+        eff = max(eff, self.policy.feasibility_slack * lam_total - others)
+        if eff >= cur * 0.999:
+            return                   # no meaningful reduction possible
+        self._nominal_caps.setdefault(bottleneck, nominal)
+        dep = self.controller.on_capacity_change(bottleneck, float(eff))
+        self.cosim.apply_deployment(dep)
+        self.last_recluster_t = t
+        self.actions.append(
+            (t, f"latency alarm (p95={p95:.1f}ms) -> edge {bottleneck} "
+             f"effective capacity {eff:.2f} rps, reclustered"))
+
+    def _restore_capacity(self, t: float) -> None:
+        """Training has been idle long enough: the interference the
+        derated capacities modeled is gone, so hand the controller its
+        nominal rates back and re-cluster once."""
+        inv_edges = self.controller.inventory.edges
+        items = [(j, cap) for j, cap in sorted(self._nominal_caps.items())
+                 if j < len(inv_edges)]
+        self._nominal_caps.clear()
+        if not items:
+            return
+        for j, cap in items[:-1]:
+            inv_edges[j].capacity_rps = cap
+        last_j, last_cap = items[-1]
+        dep = self.controller.on_capacity_change(last_j, float(last_cap))
+        self.cosim.apply_deployment(dep)
+        self.last_recluster_t = t
+        self.actions.append((t, "training idle -> nominal edge capacities "
+                             "restored, reclustered"))

@@ -1,0 +1,303 @@
+"""Training–inference co-simulation subsystem: event core ordering,
+shared Poisson streams, interference model, round timeline, drift
+injection, and the end-to-end interference + recovery claims."""
+import numpy as np
+import pytest
+
+from repro.core.topology import ClusterTopology
+from repro.data import generate, inject_drift
+from repro.fl import round_schedule
+from repro.orchestration import Inventory, LearningController
+from repro.orchestration.controller import Deployment
+from repro.routing import (CalibratedLatencyModel, LatencyModel, SimConfig,
+                           simulate)
+from repro.routing.rules import RouteDecision
+from repro.serving.workload import poisson_requests
+from repro.sim import (CoSim, CoSimConfig, EventKind, InterferenceConfig,
+                       InterferenceModel, ReactiveLoop, ReactivePolicy,
+                       Simulation)
+
+
+# ---------------------------------------------------------------------------
+# event core
+# ---------------------------------------------------------------------------
+
+def test_event_ordering_at_equal_time():
+    """Completions and state changes apply before same-instant arrivals;
+    FIFO within a kind."""
+    sim = Simulation()
+    order = []
+    sim.on(EventKind.REQUEST_COMPLETION,
+           lambda s, e: order.append("completion"))
+    sim.on(EventKind.ROUND_START, lambda s, e: order.append("round"))
+    sim.on(EventKind.REQUEST_ARRIVAL,
+           lambda s, e: order.append(f"arrival{e.node}"))
+    sim.schedule(1.0, EventKind.REQUEST_ARRIVAL, node=1)
+    sim.schedule(1.0, EventKind.ROUND_START)
+    sim.schedule(1.0, EventKind.REQUEST_COMPLETION)
+    sim.schedule(1.0, EventKind.REQUEST_ARRIVAL, node=2)
+    sim.schedule(0.5, EventKind.REQUEST_ARRIVAL, node=3)
+    n = sim.run()
+    assert n == 5
+    assert order == ["arrival3", "completion", "round",
+                     "arrival1", "arrival2"]
+
+
+def test_run_until_leaves_future_events_queued():
+    sim = Simulation()
+    seen = []
+    sim.on(EventKind.TELEMETRY, lambda s, e: seen.append(e.t))
+    for t in (1.0, 2.0, 3.0):
+        sim.schedule(t, EventKind.TELEMETRY)
+    sim.run(until=2.0)
+    assert seen == [1.0, 2.0] and len(sim.queue) == 1
+
+
+def test_epoch_end_orders_before_next_epoch_start():
+    assert EventKind.EPOCH_END < EventKind.EPOCH_START
+
+
+# ---------------------------------------------------------------------------
+# shared Poisson arrivals (dedup satellite)
+# ---------------------------------------------------------------------------
+
+def _topo(n=12, m=3, cap=6.0, lam=2.0):
+    return ClusterTopology(assign=np.arange(n) % m, n_devices=n, n_edges=m,
+                           lam=np.full(n, float(lam)),
+                           r=np.full(m, float(cap)), l=2)
+
+
+def test_simulator_uses_shared_poisson_stream():
+    """Same seed -> the simulator's arrival stream is exactly
+    ``serving.workload.poisson_requests`` (the private copy is gone)."""
+    topo = _topo()
+    log = simulate(topo, SimConfig(duration_s=20, seed=7))
+    events = poisson_requests(topo.lam, 20, seed=7)
+    assert np.allclose(log.t, [e.t for e in events])
+    assert np.array_equal(log.device, [e.device for e in events])
+
+
+def test_poisson_requests_generator_seed_equivalence():
+    lam = np.full(4, 3.0)
+    a = poisson_requests(lam, 10, seed=3)
+    b = poisson_requests(lam, 10, np.random.default_rng(3))
+    assert [(e.t, e.device) for e in a] == [(e.t, e.device) for e in b]
+
+
+def test_simulate_deterministic():
+    topo = _topo()
+    a = simulate(topo, SimConfig(duration_s=20, seed=5, busy_fraction=0.5))
+    b = simulate(topo, SimConfig(duration_s=20, seed=5, busy_fraction=0.5))
+    assert np.array_equal(a.latency_ms, b.latency_ms)
+    assert a.rule == b.rule
+
+
+# ---------------------------------------------------------------------------
+# percentiles (reporting satellite)
+# ---------------------------------------------------------------------------
+
+def test_percentile_latency():
+    log = simulate(_topo(), SimConfig(duration_s=20, seed=1))
+    assert log.percentile_latency(50) == pytest.approx(
+        float(np.percentile(log.latency_ms, 50)))
+    pct = log.latency_percentiles()
+    assert set(pct) == {"p50", "p95", "p99"}
+    assert pct["p50"] <= pct["p95"] <= pct["p99"]
+    win = log.windowed_percentile(5.0, 95)
+    assert win.shape[1] == 2 and np.all(np.diff(win[:, 0]) > 0)
+
+
+# ---------------------------------------------------------------------------
+# round timeline
+# ---------------------------------------------------------------------------
+
+def test_round_schedule_shape():
+    sched = round_schedule(rounds=6, l=3, local_epochs=4, epoch_s=2.0,
+                           upload_s=1.0, global_extra_s=0.5, gap_s=0.5)
+    assert len(sched) == 6
+    assert [w.is_global for w in sched] == [False, False, True,
+                                            False, False, True]
+    for w in sched:
+        assert w.compute_end - w.start == pytest.approx(8.0)
+        assert w.local_epochs == 4
+    # non-overlapping, gap respected
+    for a, b in zip(sched, sched[1:]):
+        assert b.start == pytest.approx(a.upload_end + 0.5)
+    # global rounds pay the extra cloud upload
+    assert (sched[2].upload_end - sched[2].compute_end
+            == pytest.approx(1.5))
+    assert (sched[0].upload_end - sched[0].compute_end
+            == pytest.approx(1.0))
+
+
+# ---------------------------------------------------------------------------
+# interference model
+# ---------------------------------------------------------------------------
+
+def test_interference_stretch():
+    m = InterferenceModel()
+    base = m.lat.infer_ms("edge")
+    dec = RouteDecision("edge", 0)
+    assert m.service_ms(0, dec) == pytest.approx(base)
+    m.set_demand(("edge", 0), "agg", 0.5)
+    assert m.service_ms(0, dec) == pytest.approx(2 * base)
+    # other nodes unaffected
+    assert m.service_ms(0, RouteDecision("edge", 1)) == pytest.approx(base)
+    m.set_demand(("edge", 0), "agg", 0.0)
+    assert m.service_ms(0, dec) == pytest.approx(base)
+
+
+def test_interference_components_compose_and_floor():
+    cfg = InterferenceConfig(floor=0.05)
+    m = InterferenceModel(cfg=cfg)
+    m.set_demand(("device", 3), "epoch", 0.4)
+    m.set_demand(("device", 3), "res", 0.3)
+    assert m.demand(("device", 3)) == pytest.approx(0.7)
+    # demand saturates at 1 - floor -> stretch caps at 1/floor
+    m.set_demand(("device", 3), "more", 5.0)
+    assert m.demand(("device", 3)) == pytest.approx(0.95)
+    assert m.stretch(("device", 3)) == pytest.approx(20.0)
+
+
+def test_interference_composes_with_calibrated_occupancy():
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": 10.0},
+                                 tier_slots={"edge": 2})
+    m = InterferenceModel(lat)
+    m.set_demand(("edge", 0), "agg", 0.5)
+    dec = RouteDecision("edge", 0)
+    # occupancy 3 on 2 slots -> 2x; training share 0.5 -> 2x; composed 4x
+    assert m.service_ms(0, dec, occupancy=3) == pytest.approx(40.0)
+
+
+def test_interference_from_measurements():
+    class M:
+        prefill_ms, decode_ms_per_token, batch_size = 4.0, 0.5, 2
+    m = InterferenceModel.from_measurements({"edge": M()}, decode_tokens=4)
+    assert isinstance(m.lat, CalibratedLatencyModel)
+    assert m.service_ms(0, RouteDecision("edge", 0)) == pytest.approx(6.0)
+
+
+# ---------------------------------------------------------------------------
+# drift injection
+# ---------------------------------------------------------------------------
+
+def test_inject_drift_shifts_only_after_onset():
+    ds = generate(num_days=3, n_sensors=8, seed=0)
+    drifted = inject_drift(ds, start_step=288, severity=0.4,
+                           ramp_steps=144)
+    assert np.array_equal(drifted.speeds[:288], ds.speeds[:288])
+    assert np.all(drifted.speeds[288:] <= ds.speeds[288:] + 1e-6)
+    # normalization is preserved so the shift reaches the model
+    assert np.array_equal(drifted.mean, ds.mean)
+    assert np.array_equal(drifted.std, ds.std)
+    late = slice(288 + 144, None)
+    ratio = drifted.speeds[late].mean() / ds.speeds[late].mean()
+    assert ratio < 0.75
+
+
+def test_inject_drift_rejects_bad_start():
+    ds = generate(num_days=2, n_sensors=4, seed=0)
+    with pytest.raises(ValueError):
+        inject_drift(ds, start_step=10 ** 6)
+
+
+# ---------------------------------------------------------------------------
+# co-simulation end-to-end
+# ---------------------------------------------------------------------------
+
+def _hot_zone(seed=0, n=20, m=4, hot=3.0, slack=1.35):
+    rng = np.random.default_rng(seed)
+    loc = np.repeat(np.arange(m), n // m)
+    lam = rng.uniform(2.0, 4.0, n)
+    lam[loc == 0] *= hot
+    r = np.full(m, lam.sum() / m * slack)
+    topo = ClusterTopology(assign=loc, n_devices=n, n_edges=m, lam=lam,
+                           r=r, l=2)
+    return topo, loc, lam, r
+
+
+def _training(duration):
+    rounds = max(int(duration / 20.0), 1)
+    return round_schedule(rounds=rounds, l=2, local_epochs=5, epoch_s=3.5,
+                          upload_s=2.0, gap_s=2.0)
+
+
+def test_cosim_training_raises_p95():
+    topo, *_ = _hot_zone()
+    cfg = CoSimConfig(duration_s=45.0, seed=0)
+    off = CoSim(topo, cfg).run()
+    on = CoSim(topo, cfg, schedule=_training(45.0)).run()
+    assert on.rounds_completed >= 2
+    # serving-only: idle devices serve locally, nothing interferes
+    assert off.log.tier_fractions()["device"] == pytest.approx(1.0)
+    # with training the same workload measurably degrades
+    assert (on.log.percentile_latency(95)
+            > 2 * off.log.percentile_latency(95))
+
+
+def test_cosim_deterministic_trace():
+    topo, *_ = _hot_zone()
+    cfg = CoSimConfig(duration_s=30.0, seed=3)
+    a = CoSim(topo, cfg, schedule=_training(30.0)).run()
+    b = CoSim(topo, cfg, schedule=_training(30.0)).run()
+    assert a.trace == b.trace
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+    assert a.log.rule == b.log.rule
+    # and a different seed genuinely changes the run
+    c = CoSim(topo, CoSimConfig(duration_s=30.0, seed=4),
+              schedule=_training(30.0)).run()
+    assert len(c.trace) != len(a.trace) \
+        or not np.array_equal(c.log.latency_ms, a.log.latency_ms)
+
+
+def test_cosim_reactive_recovers_p95_gap():
+    topo, loc, lam, r = _hot_zone()
+    cfg = CoSimConfig(duration_s=60.0, seed=0)
+    sched = _training(60.0)
+    off = CoSim(topo, cfg).run()
+    on = CoSim(topo, cfg, schedule=sched).run()
+    ctl = LearningController(
+        inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=2)
+    ctl.deployment = Deployment.from_topology(topo)
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(p95_threshold_ms=20.0))
+    rx = CoSim(topo, cfg, schedule=sched, reactive=loop).run()
+    p_off = off.log.percentile_latency(95)
+    p_on = on.log.percentile_latency(95)
+    p_rx = rx.log.percentile_latency(95)
+    assert ctl.recluster_count >= 1 and len(rx.reconfig_times) >= 1
+    assert p_on > p_rx > p_off            # recovery, but not for free
+    assert (p_on - p_rx) / (p_on - p_off) > 0.2
+
+
+def test_cosim_capacity_change_applies_without_reactive_loop():
+    """A CAPACITY_CHANGE event must alter admission even when nobody
+    re-clusters (regression: it used to be a silent no-op)."""
+    topo, *_ = _hot_zone()
+    cfg = CoSimConfig(duration_s=30.0, seed=0)
+    plain = CoSim(topo, cfg, schedule=_training(30.0)).run()
+    cosim = CoSim(topo, cfg, schedule=_training(30.0))
+    cosim.schedule_capacity_change(10.0, edge_id=0, new_rps=0.0)
+    res = cosim.run()
+    assert not np.array_equal(res.log.latency_ms, plain.log.latency_ms)
+    rules = np.asarray(res.log.rule)
+    e0 = np.isin(res.log.device, np.nonzero(topo.assign == 0)[0])
+    after = (res.log.t >= 10.0) & e0
+    # the dead-rate edge admits nothing: its busy devices all overflow
+    assert np.all(rules[after & (np.asarray(res.log.tier) == 1)]
+                  != "R1") or not np.any(after)
+    assert cosim.proc.edges[0].capacity_rps == 0.0
+
+
+def test_cosim_node_failure_spills_to_cloud():
+    topo, *_ = _hot_zone()
+    cfg = CoSimConfig(duration_s=30.0, seed=0)
+    cosim = CoSim(topo, cfg, schedule=_training(30.0))
+    cosim.schedule_failure(10.0, edge_id=0)
+    res = cosim.run()
+    rules = np.asarray(res.log.rule)
+    e0 = np.isin(res.log.device, np.nonzero(topo.assign == 0)[0])
+    before = rules[(res.log.t < 10.0) & e0]
+    after = rules[(res.log.t >= 10.0) & e0]
+    assert np.mean(after == "R3-overflow") > np.mean(before == "R3-overflow")
+    # without a reactive loop nobody re-clusters
+    assert res.reconfig_times == []

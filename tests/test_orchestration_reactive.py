@@ -1,0 +1,238 @@
+"""Controller reaction paths (paper §III last paragraph): node-failure
+edge-id remapping, capacity-change re-clustering, accuracy-alarm
+threshold semantics, recluster counting, and the reactive loop driving
+the hooks from inside the co-simulation."""
+import numpy as np
+import pytest
+
+from repro.core import is_feasible
+from repro.core.topology import ClusterTopology
+from repro.orchestration import (DeviceNode, EdgeNode, Inventory,
+                                 LearningController, random_inventory)
+from repro.orchestration.controller import Deployment
+from repro.sim import CoSim, CoSimConfig, ReactiveLoop, ReactivePolicy
+
+
+def _controller(n=16, m=4, seed=0):
+    inv = random_inventory(n=n, m=m, seed=seed, capacity_slack=1.8)
+    return LearningController(inventory=inv, l=2)
+
+
+# ---------------------------------------------------------------------------
+# on_node_failure: edge-id remapping (regression for the satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_node_failure_remaps_lan_edges():
+    """Removing edge 1 renumbers 2->1, 3->2; devices must follow their
+    *physical* edge, not keep a stale id."""
+    devices = [DeviceNode(0, lam=1.0, lan_edge=0),
+               DeviceNode(1, lam=1.0, lan_edge=1),
+               DeviceNode(2, lam=1.0, lan_edge=2),
+               DeviceNode(3, lam=1.0, lan_edge=3)]
+    edges = [EdgeNode(j, capacity_rps=10.0) for j in range(4)]
+    ctl = LearningController(inventory=Inventory(devices, edges), l=2)
+    ctl.on_node_failure(1)
+    lan = [d.lan_edge for d in ctl.inventory.devices]
+    # edge 0 keeps id 0; edge 1 died; old edge 2 is now 1, old 3 is now 2
+    assert lan == [0, None, 1, 2]
+    assert [e.id for e in ctl.inventory.edges] == [0, 1, 2]
+
+
+def test_node_failure_remap_preserves_zero_cost_link():
+    """The device that pointed at old edge 3 must still get cost 0 to
+    that same physical edge (new id 2) in the rebuilt instance."""
+    devices = [DeviceNode(i, lam=0.5, lan_edge=3) for i in range(4)]
+    edges = [EdgeNode(j, capacity_rps=5.0, cloud_cost=float(j))
+             for j in range(4)]
+    ctl = LearningController(inventory=Inventory(devices, edges), l=2)
+    ctl.on_node_failure(1)
+    inst = ctl.inventory.to_instance(l=2)
+    # old edge 3 (cloud_cost 3.0) is now index 2
+    assert ctl.inventory.edges[2].cloud_cost == 3.0
+    assert np.all(inst.c_d[:, 2] == 0.0)
+    assert np.all(inst.c_d[:, :2] == 1.0)
+
+
+def test_node_failure_redeploys_feasible():
+    ctl = _controller()
+    dep = ctl.deploy()
+    failed = dep.aggregator_nodes[0]
+    dep2 = ctl.on_node_failure(failed)
+    inst = ctl.inventory.to_instance(l=2)
+    assert is_feasible(inst, dep2.topology.assign)
+    assert len(ctl.inventory.edges) == 3
+
+
+# ---------------------------------------------------------------------------
+# on_capacity_change
+# ---------------------------------------------------------------------------
+
+def test_capacity_change_reclusters_feasibly():
+    ctl = _controller()
+    dep = ctl.deploy()
+    victim = dep.aggregator_nodes[0]
+    new_cap = ctl.inventory.edges[victim].capacity_rps * 0.5
+    dep2 = ctl.on_capacity_change(victim, new_cap)
+    assert ctl.inventory.edges[victim].capacity_rps == new_cap
+    inst = ctl.inventory.to_instance(l=2)
+    assert is_feasible(inst, dep2.topology.assign)
+    # the degraded edge no longer carries more load than it can serve
+    loads = dep2.topology.cluster_loads()
+    if victim in loads:
+        assert loads[victim] <= new_cap + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# on_accuracy_alarm threshold semantics
+# ---------------------------------------------------------------------------
+
+def test_accuracy_alarm_is_strictly_above_threshold():
+    ctl = LearningController(inventory=random_inventory(4, 2),
+                             accuracy_threshold=0.06)
+    assert not ctl.on_accuracy_alarm(0.05)
+    assert not ctl.on_accuracy_alarm(0.06)       # at threshold: no alarm
+    assert ctl.on_accuracy_alarm(0.06 + 1e-9)
+    assert ctl.on_accuracy_alarm(1.0)
+
+
+# ---------------------------------------------------------------------------
+# recluster counting under repeated events
+# ---------------------------------------------------------------------------
+
+def test_recluster_count_accumulates():
+    ctl = _controller(seed=1)
+    dep = ctl.deploy()
+    assert ctl.recluster_count == 0              # initial deploy is free
+    victim = dep.aggregator_nodes[0]
+    cap = ctl.inventory.edges[victim].capacity_rps
+    ctl.on_capacity_change(victim, cap * 0.9)
+    ctl.on_capacity_change(victim, cap * 0.8)
+    dep = ctl.on_node_failure(ctl.deployment.aggregator_nodes[0])
+    assert ctl.recluster_count == 3
+    ctl.on_capacity_change(dep.aggregator_nodes[0],
+                           ctl.inventory.edges[
+                               dep.aggregator_nodes[0]].capacity_rps * 0.9)
+    assert ctl.recluster_count == 4
+
+
+# ---------------------------------------------------------------------------
+# the reactive loop drives the hooks mid-simulation
+# ---------------------------------------------------------------------------
+
+def _scenario(seed=0, n=20, m=4, slack=1.35):
+    rng = np.random.default_rng(seed)
+    loc = np.repeat(np.arange(m), n // m)
+    lam = rng.uniform(2.0, 4.0, n)
+    lam[loc == 0] *= 3.0
+    r = np.full(m, lam.sum() / m * slack)
+    topo = ClusterTopology(assign=loc, n_devices=n, n_edges=m, lam=lam,
+                           r=r, l=2)
+    ctl = LearningController(
+        inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=2)
+    ctl.deployment = Deployment.from_topology(topo)
+    return topo, ctl
+
+
+def test_reactive_drift_triggers_retraining_burst():
+    topo, ctl = _scenario()
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=1e9))                   # isolate the accuracy path
+    loop.acc.base_mse = 0.03
+    loop.acc.drift_mse = 0.5
+    ctl.accuracy_threshold = 0.1
+    cosim = CoSim(topo, CoSimConfig(duration_s=90.0, seed=0),
+                  reactive=loop)
+    cosim.schedule_drift(20.0)
+    res = cosim.run()
+    burst = [a for _, a in res.actions if "retraining burst" in a]
+    assert len(burst) >= 1
+    assert res.rounds_completed >= 1             # the burst actually ran
+    assert res.mse_series[:, 1].max() > 0.1
+    # MSE recovers as burst rounds complete
+    assert res.mse_series[-1, 1] < res.mse_series[:, 1].max()
+
+
+def test_reactive_node_failure_reclusters_mid_sim():
+    # enough slack that the surviving 3 edges can absorb the 4th's load
+    topo, ctl = _scenario(slack=1.8)
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(p95_threshold_ms=1e9))
+    cosim = CoSim(topo, CoSimConfig(duration_s=40.0, seed=0),
+                  reactive=loop)
+    cosim.schedule_failure(15.0, edge_id=0)
+    res = cosim.run()
+    assert ctl.recluster_count == 1
+    assert len(ctl.inventory.edges) == 3
+    assert len(res.reconfig_times) == 1
+    # the swapped-in topology routes over the surviving edges only
+    assert len(cosim.proc.topo.open_edges) <= 3
+
+
+def test_reactive_derate_does_not_compound_and_restores_when_idle():
+    """Repeated latency alarms derate from the NOMINAL capacity (no
+    ratchet toward zero), and once training goes idle the controller
+    gets its nominal rates back."""
+    topo, ctl = _scenario()
+    nominal = [e.capacity_rps for e in ctl.inventory.edges]
+    from repro.fl import round_schedule
+    # training only in the first half of the horizon
+    sched = round_schedule(rounds=3, l=2, local_epochs=5, epoch_s=3.5,
+                           upload_s=2.0, gap_s=2.0)
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=20.0, cooldown_s=10.0, restore_idle_s=15.0))
+    res = CoSim(topo, CoSimConfig(duration_s=160.0, seed=0),
+                schedule=sched, reactive=loop).run()
+    derate = loop.policy.capacity_derate
+    floor = min(n * (1.0 - derate) for n in nominal) * 0.999
+    for t, a in res.actions:
+        if "effective capacity" in a:
+            eff = float(a.split("effective capacity ")[1].split(" rps")[0])
+            assert eff >= floor          # never compounds below one derate
+    assert any("restored" in a for _, a in res.actions)
+    after = [e.capacity_rps for e in ctl.inventory.edges]
+    assert after == pytest.approx(nominal)
+
+
+def test_from_arrays_treats_negative_lan_edge_as_none():
+    inv = Inventory.from_arrays(np.array([1.0, 1.0, 1.0]),
+                                np.array([5.0, 5.0]),
+                                lan_edge=np.array([0, -1, 1]))
+    assert [d.lan_edge for d in inv.devices] == [0, None, 1]
+    inst = inv.to_instance(l=2)
+    assert np.all(inst.c_d[1] == 1.0)    # no free link for the -1 device
+
+
+def test_external_capacity_change_survives_restore():
+    """A genuine hardware capacity change must not be reverted by the
+    idle-time nominal-capacity restoration."""
+    topo, ctl = _scenario()
+    from repro.fl import round_schedule
+    sched = round_schedule(rounds=3, l=2, local_epochs=5, epoch_s=3.5,
+                           upload_s=2.0, gap_s=2.0)
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=20.0, cooldown_s=10.0, restore_idle_s=15.0))
+    cosim = CoSim(topo, CoSimConfig(duration_s=160.0, seed=0),
+                  schedule=sched, reactive=loop)
+    new_rps = ctl.inventory.edges[1].capacity_rps * 0.7
+    cosim.schedule_capacity_change(50.0, edge_id=1, new_rps=new_rps)
+    res = cosim.run()
+    assert any("restored" in a for _, a in res.actions)
+    assert ctl.inventory.edges[1].capacity_rps == pytest.approx(new_rps)
+
+
+def test_reactive_repeated_runs_are_reproducible():
+    def once():
+        topo, ctl = _scenario()
+        loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+            p95_threshold_ms=20.0))
+        from repro.fl import round_schedule
+        sched = round_schedule(rounds=3, l=2, local_epochs=5, epoch_s=3.5,
+                               upload_s=2.0, gap_s=2.0)
+        res = CoSim(topo, CoSimConfig(duration_s=50.0, seed=0),
+                    schedule=sched, reactive=loop).run()
+        return res, ctl
+    a, ctl_a = once()
+    b, ctl_b = once()
+    assert a.trace == b.trace
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+    assert ctl_a.recluster_count == ctl_b.recluster_count
+    assert a.actions == b.actions
