@@ -17,13 +17,13 @@ from benchmarks.common import emit
 
 
 def build_scenario(seed=0, n=20, m=4, hot_factor=3.0, cap_slack=1.35):
-    rng = np.random.default_rng(seed)
-    loc = np.repeat(np.arange(m), n // m)
+    # one definition of the hot-zone continuum, shared with the
+    # scenario engine (identical draws)
+    from repro.sim.scenarios import hot_zone_topology
+    _, loc, lam, r = hot_zone_topology(seed=seed, n=n, m=m,
+                                       hot=hot_factor, slack=cap_slack)
     c_d = np.ones((n, m))
     c_d[np.arange(n), loc] = 0.0
-    lam = rng.uniform(2.0, 4.0, n)
-    lam[loc == 0] *= hot_factor          # hot zone
-    r = np.full(m, lam.sum() / m * cap_slack)
     inst = HFLOPInstance(c_d, np.ones(m), lam, r, l=2)
     return inst, loc
 

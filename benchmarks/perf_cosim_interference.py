@@ -22,7 +22,6 @@ import argparse
 from typing import Dict
 
 from repro.core.topology import ClusterTopology
-from repro.fl import round_schedule
 from repro.orchestration import Inventory, LearningController
 from repro.orchestration.controller import Deployment
 from repro.sim import CoSim, CoSimConfig, ReactiveLoop, ReactivePolicy
@@ -44,9 +43,9 @@ def run(duration_s: float = 240.0, seed: int = 0,
         cfg.latency = LatencyModel.from_measurements(
             ReplicaPool().measure())
     # continual training: back-to-back rounds for the whole horizon
-    n_rounds = max(int(duration_s / 20.0), 1)
-    sched = round_schedule(rounds=n_rounds, l=topo.l, local_epochs=5,
-                           epoch_s=3.5, upload_s=2.0, gap_s=2.0)
+    # (the same timeline the scenario engine uses)
+    from repro.sim.scenarios import continual_training
+    sched = continual_training(duration_s, l=topo.l)
 
     results = {}
     results["serving_only"] = CoSim(topo, cfg).run()

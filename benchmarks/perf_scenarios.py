@@ -1,0 +1,118 @@
+"""Scenario × policy grid on the co-simulation scenario engine.
+
+Runs every scenario (stragglers, device mobility, multi-tenant edges,
+combined churn) under three policies on the same seeded workload:
+
+  static    no reactive loop — the initial HFLOP deployment rides out
+            every perturbation
+  reactive  unconstrained reactive loop (reclusters whenever alarms say)
+  budgeted  the same loop metered by a ``ReconfigBudget`` — optional
+            reclusterings are deferred once the migration spend hits
+            the cap
+
+Per cell it reports p95 / rounds-completed / reclusters / budget spend,
+re-runs the cell with the same seed and checks the event-trace
+fingerprints match (``det=ok``), and per scenario summarizes how much
+of the unconstrained policy's p95 gain the budget-capped policy
+recovers and what it spent doing so.
+
+  python -m benchmarks.perf_scenarios            # full grid (120 s)
+  python -m benchmarks.perf_scenarios --smoke    # fast CI grid (60 s)
+  python -m benchmarks.perf_scenarios --scenario mobility --budget 15
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.sim.scenarios import (POLICIES, SCENARIOS, ScenarioResult,
+                                 default_budget_total, run_scenario)
+
+from benchmarks.common import emit
+
+DEFAULT_SCENARIOS = ("straggler", "mobility", "multi_tenant", "churn")
+
+
+def run(duration_s: float = 120.0, seed: int = 0,
+        budget_total: Optional[float] = None,
+        scenarios: Sequence[str] = DEFAULT_SCENARIOS,
+        check_determinism: bool = True,
+        ) -> Dict[Tuple[str, str], ScenarioResult]:
+    budget = (budget_total if budget_total is not None
+              else default_budget_total())
+    cells: Dict[Tuple[str, str], ScenarioResult] = {}
+    for sc_name in scenarios:
+        scenario = SCENARIOS[sc_name]()
+        for policy in POLICIES:
+            res = run_scenario(scenario, policy=policy, seed=seed,
+                               duration_s=duration_s, budget_total=budget)
+            det = ""
+            if check_determinism:
+                rerun = run_scenario(scenario, policy=policy, seed=seed,
+                                     duration_s=duration_s,
+                                     budget_total=budget)
+                det = (";det=ok" if res.fingerprint() == rerun.fingerprint()
+                       else ";det=FAIL")
+            cells[(sc_name, policy)] = res
+            spent = ("" if policy != "budgeted" else
+                     f";budget_spent={res.budget_spent:.1f}"
+                     f"/{res.budget_total:.1f};vetoes={res.budget_vetoes}")
+            emit(f"scenario_{sc_name}_{policy}", res.p95 * 1000,
+                 f"p95={res.p95:.2f};p50={res.p50:.2f};"
+                 f"rounds={res.rounds_completed};"
+                 f"reclusters={res.reclusters};drops={res.drops};"
+                 f"moves={res.moves}{spent}{det}")
+    for sc_name in scenarios:
+        st = cells[(sc_name, "static")]
+        rx = cells[(sc_name, "reactive")]
+        bd = cells[(sc_name, "budgeted")]
+        gain = st.p95 - rx.p95
+        frac = (st.p95 - bd.p95) / gain if gain > 0 else math.nan
+        within = bd.budget_spent <= bd.budget_total + 1e-9
+        emit(f"scenario_{sc_name}_budget_summary", frac * 1e6,
+             f"recovered_frac={frac:.2f};gain_ms={gain:.2f};"
+             f"spent={bd.budget_spent:.1f}/{bd.budget_total:.1f};"
+             f"within_budget={'yes' if within else 'NO'}")
+        if not within:
+            print(f"# WARNING: {sc_name} budgeted policy overspent "
+                  f"({bd.budget_spent:.1f} > {bd.budget_total:.1f})",
+                  file=sys.stderr)
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="reconfig budget for the 'budgeted' policy "
+                         "(edge-compute-seconds; default: 2 migrations)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="restrict the grid (repeatable)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI grid (short horizon)")
+    ap.add_argument("--no-determinism-check", action="store_true")
+    args = ap.parse_args()
+    duration = 60.0 if args.smoke else args.duration
+    print("name,us_per_call,derived")
+    cells = run(duration_s=duration, seed=args.seed,
+                budget_total=args.budget,
+                scenarios=tuple(args.scenario) if args.scenario
+                else DEFAULT_SCENARIOS,
+                check_determinism=not args.no_determinism_check)
+    print("\nscenario      policy    p95 ms  rounds  reclusters  "
+          "budget", file=sys.stderr)
+    for (sc, pol), res in cells.items():
+        b = ("-" if pol != "budgeted"
+             else f"{res.budget_spent:.0f}/{res.budget_total:.0f}"
+             + (f" ({res.budget_vetoes} vetoed)" if res.budget_vetoes
+                else ""))
+        print(f"{sc:13s} {pol:9s} {res.p95:7.2f} {res.rounds_completed:6d} "
+              f"{res.reclusters:10d}  {b}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

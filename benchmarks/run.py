@@ -31,6 +31,10 @@ def main() -> None:
         print("# --- co-sim interference smoke ---", file=sys.stderr)
         from benchmarks import perf_cosim_interference
         perf_cosim_interference.run(duration_s=60.0)
+        print("# --- scenario suite smoke (stragglers / mobility / "
+              "multi-tenant / budget) ---", file=sys.stderr)
+        from benchmarks import perf_scenarios
+        perf_scenarios.run(duration_s=60.0)
         return
 
     print("# --- Fig. 2: HFLOP solver scaling ---", file=sys.stderr)
@@ -70,6 +74,12 @@ def main() -> None:
           file=sys.stderr)
     from benchmarks import perf_cosim_interference
     perf_cosim_interference.run(duration_s=240.0 if args.full else 90.0)
+
+    print("# --- scenario suite: stragglers / mobility / multi-tenant / "
+          "budget ---", file=sys.stderr)
+    from benchmarks import perf_scenarios
+    perf_scenarios.run(duration_s=120.0 if args.full else 60.0,
+                       check_determinism=args.full)
 
     print("# --- tiered serving subsystem ---", file=sys.stderr)
     from benchmarks import perf_serving_scheduler

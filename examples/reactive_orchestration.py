@@ -99,7 +99,7 @@ def main():
 
     print("\np95 latency timeline (20 s windows):")
     for t0, p95 in res.log.windowed_percentile(20.0, 95):
-        bar = "#" * int(min(p95, 120) / 2)
+        bar = "" if np.isnan(p95) else "#" * int(min(p95, 120) / 2)
         print(f"  {t0:5.0f}s  {p95:7.2f} ms  {bar}")
 
     print("\nmodeled val MSE timeline (every 30 s):")
@@ -109,11 +109,11 @@ def main():
                  if mse > ctl.accuracy_threshold else ""))
 
     pre = res.log.latency_ms[res.log.t < 60.0]
+    win = res.log.windowed_percentile(20.0, 95)
+    filled = win[~np.isnan(win[:, 1])]           # empty windows are NaN rows
     print(f"\npre-drift p95 {np.percentile(pre, 95):.2f} ms; "
-          f"peak window p95 "
-          f"{res.log.windowed_percentile(20.0, 95)[:, 1].max():.2f} ms; "
-          f"final window p95 "
-          f"{res.log.windowed_percentile(20.0, 95)[-1, 1]:.2f} ms")
+          f"peak window p95 {filled[:, 1].max():.2f} ms; "
+          f"final window p95 {filled[-1, 1]:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -97,11 +97,11 @@ class LearningController:
 
     # -- reactions to environment / service events (paper §III last para) --
 
-    def on_node_failure(self, edge_id: int) -> Deployment:
-        """An edge host died: drop it from the inventory and re-cluster.
-        Edge ids above the removed one shift down by one, so device
-        ``lan_edge`` references must be remapped the same way — only
-        the dead edge's devices lose their LAN edge."""
+    def drop_edge(self, edge_id: int) -> None:
+        """Remove a dead edge from the inventory.  Edge ids above the
+        removed one shift down by one, so device ``lan_edge`` references
+        must be remapped the same way — only the dead edge's devices
+        lose their LAN edge."""
         self.inventory.edges = [e for e in self.inventory.edges
                                 if e.id != edge_id]
         for k, e in enumerate(self.inventory.edges):
@@ -113,11 +113,33 @@ class LearningController:
                 d.lan_edge = None
             elif d.lan_edge > edge_id:
                 d.lan_edge -= 1
+
+    def on_node_failure(self, edge_id: int,
+                        redeploy: bool = True) -> Optional[Deployment]:
+        """An edge host died: drop it from the inventory and re-cluster.
+        ``redeploy=False`` records the loss without solving — the
+        reactive loop uses it when a reconfiguration budget defers the
+        re-deploy (the stale topology keeps serving meanwhile)."""
+        self.drop_edge(edge_id)
+        if not redeploy:
+            return None
         self.recluster_count += 1
         return self.deploy()
 
     def on_capacity_change(self, edge_id: int, new_rps: float) -> Deployment:
         self.inventory.edges[edge_id].capacity_rps = new_rps
+        self.recluster_count += 1
+        return self.deploy()
+
+    def on_device_move(self, device_id: int, new_edge: Optional[int],
+                       redeploy: bool = True) -> Optional[Deployment]:
+        """A device handed over to a different LAN edge (mobility):
+        update its zero-cost association and, unless ``redeploy`` is
+        False (budget-deferred or inside the recluster cooldown),
+        re-solve HFLOP around the new cost structure."""
+        self.inventory.devices[device_id].lan_edge = new_edge
+        if not redeploy:
+            return None
         self.recluster_count += 1
         return self.deploy()
 

@@ -17,6 +17,7 @@ timeline and the service times through an interference model.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -38,13 +39,22 @@ class RequestLog:
     latency_ms: np.ndarray
 
     def mean_latency(self) -> float:
+        """Mean end-to-end latency in ms (NaN on an empty log)."""
+        if self.latency_ms.size == 0:
+            return math.nan
         return float(np.mean(self.latency_ms))
 
     def std_latency(self) -> float:
+        if self.latency_ms.size == 0:
+            return math.nan
         return float(np.std(self.latency_ms))
 
     def percentile_latency(self, p: float) -> float:
-        """p-th percentile of end-to-end latency in ms (p in [0, 100])."""
+        """p-th percentile of end-to-end latency in ms (p in [0, 100]);
+        NaN on an empty log — short smoke runs can legitimately serve
+        zero requests, and reporting must not crash on them."""
+        if self.latency_ms.size == 0:
+            return math.nan
         return float(np.percentile(self.latency_ms, p))
 
     def latency_percentiles(self) -> Dict[str, float]:
@@ -54,6 +64,8 @@ class RequestLog:
 
     def tier_fractions(self) -> Dict[str, float]:
         names = {0: "device", 1: "edge", 2: "cloud"}
+        if self.tier.size == 0:
+            return {name: math.nan for name in names.values()}
         out = {}
         for k, name in names.items():
             out[name] = float(np.mean(self.tier == k))
@@ -62,16 +74,18 @@ class RequestLog:
     def windowed_percentile(self, window_s: float, p: float = 95.0,
                             ) -> np.ndarray:
         """(n_windows, 2) array of [window start, p-th percentile latency]
-        — the latency timeline the reactive monitors and examples plot."""
+        — the latency timeline the reactive monitors and examples plot.
+        Windows without any arrivals are NaN rows (not silently dropped),
+        so the timeline keeps a uniform grid and gaps stay visible."""
         if self.t.size == 0:
             return np.zeros((0, 2))
-        edges = np.arange(0.0, float(self.t.max()) + window_s, window_s)
+        edges = np.arange(0.0, float(self.t.max()) + 1e-9, window_s)
         rows = []
         for lo in edges:
             m = (self.t >= lo) & (self.t < lo + window_s)
-            if np.any(m):
-                rows.append((lo, float(np.percentile(self.latency_ms[m],
-                                                     p))))
+            val = (float(np.percentile(self.latency_ms[m], p))
+                   if np.any(m) else math.nan)
+            rows.append((lo, val))
         return np.asarray(rows)
 
 
@@ -93,8 +107,9 @@ class RequestProcessor:
       ``busy_fn(device, t)``          -> is the device training right now?
       ``service_fn(device, dec, occ)`` -> service time in ms (defaults to
                                           the latency model's ``infer_ms``)
-      ``extra_ms_fn(dec, t)``         -> additive penalty (reconfiguration
-                                          cost windows in the co-sim)
+      ``extra_ms_fn(dec, t, device)`` -> additive penalty (reconfiguration
+                                          and handover cost windows in
+                                          the co-sim)
     """
 
     def __init__(self, topo: ClusterTopology, rng: np.random.Generator,
@@ -103,7 +118,7 @@ class RequestProcessor:
                  service_fn: Optional[
                      Callable[[int, RouteDecision, int], float]] = None,
                  extra_ms_fn: Optional[
-                     Callable[[RouteDecision, float], float]] = None):
+                     Callable[[RouteDecision, float, int], float]] = None):
         self.rng = rng
         self.lat = latency if latency is not None else LatencyModel()
         self.busy_fn = busy_fn or (lambda i, t: False)
@@ -167,7 +182,7 @@ class RequestProcessor:
         else:
             net = float(self.lat.rtt("device", self.rng))
         if self.extra_ms_fn is not None:
-            net += float(self.extra_ms_fn(dec, t))
+            net += float(self.extra_ms_fn(dec, t, i))
         self._t.append(t)
         self._dev.append(i)
         self._tier.append(self._tier_code[dec.tier])

@@ -18,6 +18,12 @@ _LAZY = {
     "AccuracyModel": "repro.sim.reactive",
     "ReactiveLoop": "repro.sim.reactive",
     "ReactivePolicy": "repro.sim.reactive",
+    "BudgetEntry": "repro.sim.budget",
+    "ReconfigBudget": "repro.sim.budget",
+    "SCENARIOS": "repro.sim.scenarios",
+    "Scenario": "repro.sim.scenarios",
+    "ScenarioResult": "repro.sim.scenarios",
+    "run_scenario": "repro.sim.scenarios",
 }
 
 __all__ = ["Event", "EventKind", "EventQueue", "Simulation"] + list(_LAZY)

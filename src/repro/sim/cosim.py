@@ -32,11 +32,17 @@ import numpy as np
 from repro.core.topology import ClusterTopology
 from repro.fl.hierarchy import RoundWindow
 from repro.routing.latency import LatencyModel
-from repro.routing.rules import RouteDecision
+from repro.routing.rules import EdgeState, RouteDecision
 from repro.routing.simulator import RequestLog, RequestProcessor
 from repro.serving.workload import poisson_requests
+from repro.sim.budget import ReconfigBudget
 from repro.sim.events import Event, EventKind, Simulation
 from repro.sim.interference import InterferenceConfig, InterferenceModel
+
+# interference-demand source-name prefixes for load that is *external*
+# to the training pipeline — it survives the edge-tier rebuild on a
+# re-deploy (a tenant job doesn't vanish because HFL re-clustered)
+EXTERNAL_DEMAND_PREFIXES = ("tenant:", "handover:")
 
 
 @dataclass
@@ -52,6 +58,8 @@ class CoSimConfig:
     telemetry_s: float = 2.0         # reactive monitor tick period
     reconfig_s: float = 5.0          # replica migration duration
     reconfig_penalty_ms: float = 25.0  # per-request cost while migrating
+    handover_s: float = 3.0          # device-mobility handover duration
+    handover_penalty_ms: float = 15.0  # per-request cost while handing over
     record_trace: bool = True
 
 
@@ -63,6 +71,11 @@ class CoSimResult:
     reconfig_times: List[float]
     mse_series: np.ndarray           # (k, 2) [t, modeled val MSE]
     actions: List[Tuple[float, str]]  # reactive-loop decisions
+    budget: Optional[ReconfigBudget] = None  # reconfig accountant, if any
+    drop_log: List[Tuple[float, int, int, int]] = field(
+        default_factory=list)        # (t, device, round idx, epochs dropped)
+    move_log: List[Tuple[float, int, int, int]] = field(
+        default_factory=list)        # (t, device, old edge, new edge)
 
 
 class CoSim:
@@ -72,7 +85,7 @@ class CoSim:
 
     def __init__(self, topo: ClusterTopology, cfg: CoSimConfig,
                  schedule: Optional[Sequence[RoundWindow]] = None,
-                 reactive=None):
+                 reactive=None, budget: Optional[ReconfigBudget] = None):
         self.cfg = cfg
         self.sim = Simulation(record_trace=cfg.record_trace)
         self.rng = np.random.default_rng(cfg.seed)
@@ -84,11 +97,30 @@ class CoSim:
         self.proc = RequestProcessor(
             topo, self.rng, latency=cfg.latency, busy_fn=self._busy,
             service_fn=self.interference.service_ms,
-            extra_ms_fn=self._reconfig_penalty)
+            extra_ms_fn=self._request_penalty)
         self.proc.bind(self.sim)
 
         self._busy_count = np.zeros(n, dtype=int)
         self._epochs_left: Dict[Tuple[int, int], np.ndarray] = {}
+        # per-window per-device epoch plan [(start, end, token), ...]
+        # so a STRAGGLER can re-time the epochs that have not started yet
+        self._epoch_sched: Dict[Tuple[int, int],
+                                Tuple[RoundWindow,
+                                      Dict[int, List[List]]]] = {}
+        self._cancelled: Set[int] = set()   # tokens of re-timed epochs
+        self._tok = 0
+        self._straggler_info: Dict[int, List[Tuple[int, RoundWindow,
+                                                   float]]] = {}
+        self._handover_until = np.full(n, -math.inf)
+        # injection-time edge id -> current topology id (None once the
+        # host is gone).  Scheduled events (moves, tenant jobs,
+        # failures) name edges as they were numbered when scheduled; a
+        # failure-driven recluster renumbers the topology, and the
+        # reactive loop composes that shift into this alias so pending
+        # events keep landing on the same physical host (or are dropped
+        # when it is dead).
+        self.edge_alias: Dict[int, Optional[int]] = {
+            j: j for j in range(topo.n_edges)}
         self._active_rounds = 0
         self._active_aggs: Set[Tuple[int, int]] = set()
         self._sched_count = 0
@@ -96,7 +128,11 @@ class CoSim:
         self.last_round_end = -math.inf
         self.reconfig_until = -math.inf
         self.reconfig_times: List[float] = []
+        self.drop_log: List[Tuple[float, int, int, int]] = []
+        self.move_log: List[Tuple[float, int, int, int]] = []
+        self.tenant_log: List[Tuple[float, int, str, float]] = []
         self.reactive = reactive
+        self.budget = budget
 
         s = self.sim
         s.on(EventKind.ROUND_START, self._on_round_start)
@@ -105,10 +141,12 @@ class CoSim:
         s.on(EventKind.AGG_START, self._on_agg_start)
         s.on(EventKind.AGG_END, self._on_agg_end)
         s.on(EventKind.ROUND_END, self._on_round_end)
-        s.on(EventKind.NODE_FAILURE,
-             lambda sim, ev: self.proc.fail_edge(ev.node))
+        s.on(EventKind.NODE_FAILURE, self._on_node_failure)
         s.on(EventKind.CAPACITY_CHANGE, self._on_capacity_change)
         s.on(EventKind.RECONFIG_END, self._on_reconfig_end)
+        s.on(EventKind.STRAGGLER, self._on_straggler)
+        s.on(EventKind.DEVICE_MOVE, self._on_device_move)
+        s.on(EventKind.TENANT_LOAD, self._on_tenant_load)
 
         for ev in poisson_requests(topo.lam * cfg.rate_scale,
                                    cfg.duration_s, self.rng):
@@ -150,6 +188,40 @@ class CoSim:
                        ) -> None:
         self.sim.schedule(t, EventKind.DRIFT_ONSET, payload=drift_mse)
 
+    def schedule_straggler(self, t: float, device_id: int,
+                           factor: float) -> None:
+        """At ``t`` device ``device_id``'s not-yet-started local epochs
+        take ``factor``x their nominal duration (thermal throttling, a
+        co-located job, a slow link) for every round active at ``t``."""
+        if factor <= 0.0:
+            raise ValueError(f"straggler factor must be positive, "
+                             f"got {factor}")
+        self.sim.schedule(t, EventKind.STRAGGLER, node=int(device_id),
+                          payload=float(factor))
+
+    def schedule_device_move(self, t: float, device_id: int,
+                             new_edge: int) -> None:
+        """Device mobility: at ``t`` the device's LAN association changes
+        to ``new_edge`` (its requests route there), paying a modeled
+        handover — ``handover_penalty_ms`` per request for
+        ``handover_s`` seconds plus ``handover_share`` demand on the
+        receiving edge."""
+        self.sim.schedule(t, EventKind.DEVICE_MOVE, node=int(device_id),
+                          payload=int(new_edge))
+
+    def schedule_tenant_load(self, t: float, edge_id: int, share: float,
+                             duration_s: Optional[float] = None,
+                             tenant: str = "t0") -> None:
+        """Multi-tenant edge: a third-party job claims ``share`` of edge
+        ``edge_id``'s compute from ``t`` (for ``duration_s`` seconds, or
+        until a later call sets the same tenant's share to 0)."""
+        src = f"tenant:{tenant}"
+        self.sim.schedule(t, EventKind.TENANT_LOAD, node=int(edge_id),
+                          payload=(src, float(share)))
+        if duration_s is not None:
+            self.sim.schedule(t + duration_s, EventKind.TENANT_LOAD,
+                              node=int(edge_id), payload=(src, 0.0))
+
     # -- training timeline handlers -----------------------------------------
 
     def _on_round_start(self, sim: Simulation, ev: Event) -> None:
@@ -161,27 +233,44 @@ class CoSim:
         if participants.size == 0:   # flat FL: every device trains
             participants = np.arange(len(assign))
         left = np.zeros(len(assign), dtype=int)
+        per_dev: Dict[int, List[List]] = {}
         for i in participants:
             e_i = nominal * self.speed[i]
+            plan = []
             for k in range(w.local_epochs):
-                sim.schedule(w.start + k * e_i, EventKind.EPOCH_START,
-                             node=int(i), payload=(sid, w))
-                sim.schedule(w.start + (k + 1) * e_i, EventKind.EPOCH_END,
-                             node=int(i), payload=(sid, w))
+                tok = self._tok
+                self._tok += 1
+                s_k = w.start + k * e_i
+                sim.schedule(s_k, EventKind.EPOCH_START, node=int(i),
+                             payload=(sid, w, tok))
+                sim.schedule(s_k + e_i, EventKind.EPOCH_END, node=int(i),
+                             payload=(sid, w, tok))
+                plan.append([s_k, s_k + e_i, tok])
+            per_dev[int(i)] = plan
             left[i] = w.local_epochs
         self._epochs_left[(sid, w.index)] = left
+        self._epoch_sched[(sid, w.index)] = (w, per_dev)
 
     def _on_epoch_start(self, sim: Simulation, ev: Event) -> None:
+        sid, w, tok = ev.payload
+        if tok in self._cancelled:
+            return                   # re-timed or dropped by a straggler
         i = ev.node
         self._busy_count[i] += 1
         self.interference.set_demand(("device", i), "epoch",
                                      self.cfg.interference.device_train_share)
 
     def _on_epoch_end(self, sim: Simulation, ev: Event) -> None:
-        sid, w = ev.payload
+        sid, w, tok = ev.payload
+        if tok in self._cancelled:
+            return
         i = ev.node
         self._busy_count[i] -= 1
-        left = self._epochs_left[(sid, w.index)]
+        left = self._epochs_left.get((sid, w.index))
+        if left is None:             # straggler epoch outlived its round
+            if self._busy_count[i] == 0:
+                self.interference.set_demand(("device", i), "epoch", 0.0)
+            return
         left[i] -= 1
         if self._busy_count[i] == 0:
             self.interference.set_demand(("device", i), "epoch", 0.0)
@@ -220,29 +309,197 @@ class CoSim:
         for i in range(len(self._busy_count)):
             self.interference.set_demand(("device", i), src, 0.0)
         self._epochs_left.pop((sid, w.index), None)
+        self._epoch_sched.pop((sid, w.index), None)
         self.rounds_completed += 1
         self.last_round_end = sim.now
+
+    def resolve_edge(self, edge_id: int) -> Optional[int]:
+        """Current topology id of an edge named by its injection-time
+        id; None when the host has been dropped since."""
+        return self.edge_alias.get(int(edge_id))
+
+    def remap_edge_alias(self, remap) -> None:
+        """Compose a topology renumbering (old current id -> new
+        current id, None once dead) into the injection-time alias.
+        Keys are kept so a dead host stays distinguishable from an id
+        that never existed."""
+        self.edge_alias = {
+            k: (None if v is None else remap(v))
+            for k, v in self.edge_alias.items()}
+
+    def _on_node_failure(self, sim: Simulation, ev: Event) -> None:
+        cur = self.resolve_edge(ev.node)
+        if cur is not None:
+            self.proc.fail_edge(cur)
 
     def _on_capacity_change(self, sim: Simulation, ev: Event) -> None:
         """Apply the new rate to the edge's admission state even without
         a reactive loop (which would additionally re-cluster): the edge
         host genuinely got slower/faster, reactions or not."""
-        st = self.proc.edges.get(int(ev.node))
+        cur = self.resolve_edge(ev.node)
+        st = self.proc.edges.get(cur) if cur is not None else None
         if st is not None:
             st.capacity_rps = float(ev.payload)
             st.tokens = min(st.tokens, st.capacity_rps * st.burst_s)
 
+    # -- scenario events: stragglers, mobility, multi-tenant edges ----------
+
+    def _on_straggler(self, sim: Simulation, ev: Event) -> None:
+        """Re-time the device's not-yet-started epochs in every active
+        round: each takes ``factor``x its planned duration and they run
+        back-to-back from the straggle onset (or from the end of the
+        epoch currently in flight).  A reactive loop registered after
+        this handler reads :meth:`straggler_info` for the projected
+        finish times and applies its deadline-based drop policy."""
+        i, factor, t = int(ev.node), float(ev.payload), ev.t
+        info: List[Tuple[int, RoundWindow, float]] = []
+        for (sid, widx), (w, per_dev) in self._epoch_sched.items():
+            plan = per_dev.get(i)
+            if not plan:
+                continue
+            kept = [e for e in plan if e[0] <= t]
+            pending = [e for e in plan if e[0] > t]
+            if not pending:
+                continue             # nothing left to slow this round
+            resume = max(t, kept[-1][1]) if kept else t
+            for start, end, tok in pending:
+                self._cancelled.add(tok)
+                dur = (end - start) * factor
+                new_tok = self._tok
+                self._tok += 1
+                sim.schedule(resume, EventKind.EPOCH_START, node=i,
+                             payload=(sid, w, new_tok))
+                sim.schedule(resume + dur, EventKind.EPOCH_END, node=i,
+                             payload=(sid, w, new_tok))
+                kept.append([resume, resume + dur, new_tok])
+                resume += dur
+            per_dev[i] = kept
+            info.append((sid, w, kept[-1][1]))
+        self._straggler_info[i] = info
+
+    def straggler_info(self, device_id: int,
+                       ) -> List[Tuple[int, RoundWindow, float]]:
+        """(schedule id, round window, projected epoch-finish time) per
+        round the last STRAGGLER event on ``device_id`` touched."""
+        return list(self._straggler_info.get(int(device_id), []))
+
+    def drop_from_round(self, device_id: int, sid: int, round_index: int,
+                        ) -> int:
+        """Deadline-based partial aggregation: cancel the device's
+        not-yet-started epochs in one round (the epoch in flight, if
+        any, finishes and is wasted work).  Returns the number of epochs
+        dropped."""
+        entry = self._epoch_sched.get((sid, round_index))
+        if entry is None:
+            return 0
+        _, per_dev = entry
+        now = self.sim.now
+        dropped, kept = 0, []
+        for start, end, tok in per_dev.get(int(device_id), []):
+            if start > now and tok not in self._cancelled:
+                self._cancelled.add(tok)
+                dropped += 1
+            else:
+                kept.append([start, end, tok])
+        per_dev[int(device_id)] = kept
+        if dropped:
+            self.drop_log.append((now, int(device_id), int(round_index),
+                                  dropped))
+        return dropped
+
+    def _on_device_move(self, sim: Simulation, ev: Event) -> None:
+        """Mobility handover: re-home the device's requests on the new
+        LAN edge and pay the modeled handover cost.  A reactive loop
+        additionally updates the controller inventory (and may
+        re-cluster, budget permitting).  The target edge is named by
+        its injection-time id; if that host has been dropped since, the
+        handover is abandoned (the device stays where it is)."""
+        i, j_raw, t = int(ev.node), int(ev.payload), ev.t
+        assign = self.proc.topo.assign
+        if not (0 <= i < len(assign)):
+            return
+        if j_raw >= 0 and j_raw not in self.edge_alias:
+            raise ValueError(f"device {i} moved to unknown edge {j_raw} "
+                             f"(never part of the topology)")
+        j_new = self.resolve_edge(j_raw) if j_raw >= 0 else j_raw
+        if j_new is None:
+            return                   # target host died before the handover
+        j_old = int(assign[i])
+        assign[i] = j_new
+        if j_new >= 0 and j_new not in self.proc.edges:
+            # the target edge had no cluster yet: open admission state
+            # with its physical capacity
+            r = self.proc.topo.r
+            self.proc.edges[j_new] = EdgeState(
+                capacity_rps=float(r[j_new]) if r.size else np.inf)
+        # a device has at most one handover in flight: a new move
+        # supersedes the previous one's edge load everywhere
+        src = f"handover:{i}"
+        self.interference.clear_tier("edge", source=src)
+        self._handover_until[i] = t + self.cfg.handover_s
+        if j_new >= 0:
+            self.interference.set_demand(
+                ("edge", j_new), src, self.cfg.interference.handover_share)
+            sim.schedule(t + self.cfg.handover_s, EventKind.TENANT_LOAD,
+                         node=j_raw, payload=(src, 0.0))
+        self.move_log.append((t, i, j_old, j_new))
+
+    def _on_tenant_load(self, sim: Simulation, ev: Event) -> None:
+        """External edge demand change: a third-party tenant job starts
+        (share > 0) or ends (share == 0) on the edge — also reused to
+        clear handover load.  Edge named by injection-time id (dropped
+        hosts swallow their jobs); a handover clear is skipped when a
+        newer handover of the same device extended the window."""
+        src, share = ev.payload
+        src = str(src)
+        if src.startswith("handover:") and share == 0.0:
+            dev = int(src.split(":", 1)[1])
+            if ev.t < self._handover_until[dev] - 1e-9:
+                return               # superseded by a newer handover
+        j = self.resolve_edge(ev.node)
+        if j is None:
+            return
+        self.interference.set_demand(("edge", j), src, float(share))
+        self.tenant_log.append((ev.t, j, src, float(share)))
+
     # -- reactive-deployment plumbing ---------------------------------------
 
-    def apply_deployment(self, deployment) -> None:
+    def reconfig_cost(self, deployment=None,
+                      n_edges: Optional[int] = None) -> float:
+        """Modeled cost of one deployment swap, in edge-compute-seconds:
+        every open edge of the incoming topology carries
+        ``migration_share`` demand for ``reconfig_s`` seconds.  Pass
+        ``n_edges`` to bound the cost *before* solving (the reactive
+        loop pre-checks the budget against the inventory size — an
+        upper bound on open edges — so a swap is never vetoed after the
+        controller has already been mutated)."""
+        if n_edges is None:
+            topo = deployment.topology if deployment is not None else \
+                self.proc.topo
+            n_edges = len(topo.open_edges)
+        return (self.cfg.reconfig_s
+                * self.cfg.interference.migration_share * max(n_edges, 1))
+
+    def apply_deployment(self, deployment, reason: str = "recluster",
+                         forced: bool = False) -> bool:
         """Swap in a re-clustered deployment mid-simulation, paying a
         modeled reconfiguration cost: replicas migrate for
         ``reconfig_s`` seconds during which edges carry migration load
-        and every edge-touching request pays ``reconfig_penalty_ms``."""
+        and every edge-touching request pays ``reconfig_penalty_ms``.
+
+        When a :class:`ReconfigBudget` is attached, the swap is metered
+        first — an unaffordable, non-``forced`` swap is vetoed (returns
+        False, the deployment does NOT go live)."""
         t = self.sim.now
+        if self.budget is not None and not self.budget.charge(
+                t, self.reconfig_cost(deployment), reason, forced=forced):
+            return False
         self.proc.set_topology(deployment.topology)
-        # demands were keyed by old edge ids: rebuild edge-tier state
-        self.interference.clear_tier("edge")
+        # training demands were keyed by old edge ids: rebuild the edge
+        # tier (external tenant/handover load stays — a third-party job
+        # doesn't vanish because HFL re-clustered)
+        self.interference.clear_tier(
+            "edge", keep_prefixes=EXTERNAL_DEMAND_PREFIXES)
         share = self.cfg.interference.edge_agg_share
         for sid, idx in self._active_aggs:
             for j in self.proc.edges:
@@ -255,6 +512,7 @@ class CoSim:
         self.reconfig_until = t + self.cfg.reconfig_s
         self.reconfig_times.append(t)
         self.sim.schedule(self.reconfig_until, EventKind.RECONFIG_END)
+        return True
 
     def _on_reconfig_end(self, sim: Simulation, ev: Event) -> None:
         if sim.now >= self.reconfig_until:
@@ -269,10 +527,15 @@ class CoSim:
     def _busy(self, i: int, t: float) -> bool:
         return self._busy_count[i] > 0
 
-    def _reconfig_penalty(self, dec: RouteDecision, t: float) -> float:
+    def _request_penalty(self, dec: RouteDecision, t: float,
+                         device: int) -> float:
+        extra = 0.0
         if t < self.reconfig_until and dec.edge is not None:
-            return self.cfg.reconfig_penalty_ms
-        return 0.0
+            extra += self.cfg.reconfig_penalty_ms
+        # handover churn hits the network path, not on-device serving
+        if t < self._handover_until[device] and dec.tier != "device":
+            extra += self.cfg.handover_penalty_ms
+        return extra
 
     # -- run ----------------------------------------------------------------
 
@@ -286,4 +549,7 @@ class CoSim:
         return CoSimResult(log=self.proc.log(), trace=list(self.sim.trace),
                            rounds_completed=self.rounds_completed,
                            reconfig_times=list(self.reconfig_times),
-                           mse_series=mse, actions=actions)
+                           mse_series=mse, actions=actions,
+                           budget=self.budget,
+                           drop_log=list(self.drop_log),
+                           move_log=list(self.move_log))

@@ -30,16 +30,19 @@ class EventKind(IntEnum):
     REQUEST_COMPLETION = 0   # a served request leaves its replica
     NODE_FAILURE = 1         # an edge host dies
     CAPACITY_CHANGE = 2      # an edge host's serving capacity shifts
-    DRIFT_ONSET = 3          # concept drift begins in the data stream
-    RECONFIG_END = 4         # replica migration / re-deploy finishes
-    ROUND_START = 5          # an HFL training round begins
-    EPOCH_END = 6            # a device finishes one local epoch
-    EPOCH_START = 7          # a device starts one local epoch
-    AGG_START = 8            # aggregation upload window opens (edges busy)
-    AGG_END = 9              # aggregation upload window closes
-    ROUND_END = 10           # the training round is over
-    TELEMETRY = 11           # periodic monitor tick (reactive loop)
-    REQUEST_ARRIVAL = 12     # an inference request arrives
+    DEVICE_MOVE = 3          # a device hands over to another LAN edge
+    STRAGGLER = 4            # a device's remaining epochs slow mid-round
+    TENANT_LOAD = 5          # third-party edge demand changes (multi-tenant)
+    DRIFT_ONSET = 6          # concept drift begins in the data stream
+    RECONFIG_END = 7         # replica migration / re-deploy finishes
+    ROUND_START = 8          # an HFL training round begins
+    EPOCH_END = 9            # a device finishes one local epoch
+    EPOCH_START = 10         # a device starts one local epoch
+    AGG_START = 11           # aggregation upload window opens (edges busy)
+    AGG_END = 12             # aggregation upload window closes
+    ROUND_END = 13           # the training round is over
+    TELEMETRY = 14           # periodic monitor tick (reactive loop)
+    REQUEST_ARRIVAL = 15     # an inference request arrives
 
 
 @dataclass(frozen=True)

@@ -19,7 +19,7 @@ is slow for both reasons.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import RouteDecision
@@ -34,6 +34,8 @@ class InterferenceConfig:
     edge_agg_share: float = 0.6        # share while aggregating uploads
     cloud_agg_share: float = 0.3       # share during a global aggregation
     migration_share: float = 0.5       # share while replicas migrate
+    handover_share: float = 0.25       # share on the receiving edge while a
+    #                                    moving device hands over
     floor: float = 0.05                # serving never starves below this
 
 
@@ -57,14 +59,38 @@ class InterferenceModel:
         else:
             comp[source] = float(share)
 
-    def clear_tier(self, tier: str, source: Optional[str] = None) -> None:
+    def clear_tier(self, tier: str, source: Optional[str] = None,
+                   keep_prefixes: Tuple[str, ...] = ()) -> None:
+        """Drop a tier's demand: one named ``source`` everywhere, or all
+        sources — except those whose name starts with a ``keep_prefixes``
+        entry (external demand like tenant jobs survives a re-deploy
+        that rebuilds the training-side components)."""
         for node, comp in self._demand.items():
             if node[0] != tier:
                 continue
-            if source is None:
-                comp.clear()
-            else:
+            if source is not None:
                 comp.pop(source, None)
+            elif keep_prefixes:
+                for k in [k for k in comp if not k.startswith(keep_prefixes)]:
+                    comp.pop(k)
+            else:
+                comp.clear()
+
+    def remap_tier(self, tier: str,
+                   remap: Callable[[int], Optional[int]]) -> None:
+        """Re-key one tier's demand through ``remap`` (old node id ->
+        new id; None drops the node) — used when a re-clustered
+        deployment renumbers edges, so demand keeps following its
+        physical host."""
+        moved: Dict[NodeKey, Dict[str, float]] = {}
+        for node in [n for n in self._demand if n[0] == tier]:
+            comp = self._demand.pop(node)
+            new = remap(node[1])
+            if new is None or not comp:
+                continue
+            moved.setdefault((tier, int(new)), {}).update(comp)
+        for node, comp in moved.items():
+            self._demand.setdefault(node, {}).update(comp)
 
     def demand(self, node: NodeKey) -> float:
         total = sum(self._demand.get(node, {}).values())

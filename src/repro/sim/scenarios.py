@@ -1,0 +1,277 @@
+"""Scenario engine on the co-simulation event core.
+
+A :class:`Scenario` is a deterministic event-injection recipe — it
+schedules typed perturbations (stragglers, device mobility, tenant
+jobs, node failures, drift) onto a freshly built :class:`CoSim` and
+nothing else, so the same scenario composes with any policy:
+
+  static    no reactive loop — the initial deployment rides it out
+  reactive  unconstrained reactive loop (PR 2 behavior)
+  budgeted  reactive loop metered by a :class:`ReconfigBudget` —
+            optional reclusterings are deferred once the modeled
+            migration spend hits the cap
+
+:func:`run_scenario` wires the standard hot-zone continuum (the Fig. 7
+setup: 20 devices, 4 edges, one hot cluster) through inventory ->
+controller -> reactive loop -> CoSim, injects the scenario, runs it,
+and summarizes latency, training progress and budget spend.  Every
+piece of randomness flows through generators seeded from the scenario
+seed, so a (scenario, policy, seed) triple reproduces its event trace
+bit-for-bit — asserted by :meth:`ScenarioResult.fingerprint` in the
+tests and the ``perf_scenarios`` benchmark grid.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.topology import ClusterTopology
+from repro.routing.simulator import RequestLog
+from repro.fl.hierarchy import round_schedule
+from repro.orchestration import Inventory, LearningController
+from repro.orchestration.controller import Deployment
+from repro.sim.budget import ReconfigBudget
+from repro.sim.cosim import CoSim, CoSimConfig
+from repro.sim.reactive import ReactiveLoop, ReactivePolicy
+
+POLICIES = ("static", "reactive", "budgeted")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, deterministic perturbation recipe over a built CoSim."""
+    name: str
+    description: str
+    inject: Callable[[CoSim], None]
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    policy: str
+    seed: int
+    p50: float
+    p95: float
+    p99: float
+    mean_ms: float
+    n_requests: int
+    rounds_completed: int
+    reclusters: int
+    budget_total: float
+    budget_spent: float
+    budget_vetoes: int
+    drops: int                       # straggler devices dropped from rounds
+    moves: int                       # device handovers executed
+    actions: List[Tuple[float, str]]
+    trace: List[Tuple[float, str, int]]
+    log: RequestLog                  # full request log (timeline plots)
+
+    def fingerprint(self) -> str:
+        """Digest of the full event trace + per-request latencies —
+        two runs of the same (scenario, policy, seed) must match."""
+        h = hashlib.sha256()
+        for t, kind, node in self.trace:
+            h.update(f"{t!r}|{kind}|{node};".encode())
+        h.update(np.ascontiguousarray(self.log.latency_ms).tobytes())
+        for t, a in self.actions:
+            h.update(f"{t!r}|{a};".encode())
+        return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# the standard continuum the scenarios perturb
+# ---------------------------------------------------------------------------
+
+def hot_zone_topology(seed: int = 0, n: int = 20, m: int = 4,
+                      hot: float = 3.0, slack: float = 1.35,
+                      ) -> Tuple[ClusterTopology, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """The Fig. 7 hot-zone continuum: location clusters with one zone's
+    request load inflated by ``hot``x.  When ``m`` does not divide
+    ``n``, the first zones absorb the remainder (contiguous zones
+    either way; the divisible case matches the Fig. 7 draws exactly)."""
+    rng = np.random.default_rng(seed)
+    loc = np.repeat(np.arange(m), -(-n // m))[:n]
+    lam = rng.uniform(2.0, 4.0, n)
+    lam[loc == 0] *= hot
+    r = np.full(m, lam.sum() / m * slack)
+    topo = ClusterTopology(assign=loc.copy(), n_devices=n, n_edges=m,
+                           lam=lam, r=r, l=2)
+    return topo, loc, lam, r
+
+
+def continual_training(duration_s: float, l: int = 2,
+                       ) -> Sequence:
+    """Back-to-back HFL rounds covering the horizon (continual
+    learning), the same shape the co-sim benchmarks use."""
+    rounds = max(int(duration_s / 20.0), 1)
+    return round_schedule(rounds=rounds, l=l, local_epochs=5, epoch_s=3.5,
+                          upload_s=2.0, gap_s=2.0)
+
+
+# ---------------------------------------------------------------------------
+# scenario recipes
+# ---------------------------------------------------------------------------
+
+def baseline_scenario() -> Scenario:
+    return Scenario("baseline", "training-inference interference only, "
+                    "no extra perturbations", lambda cosim: None)
+
+
+def straggler_scenario(times: Sequence[float] = (5.0, 27.0, 48.0),
+                       devices: Sequence[int] = (0, 5, 1),
+                       factor: float = 4.0) -> Scenario:
+    """Devices slow down mid-round (thermal throttling / co-located
+    jobs); the reactive drop policy enforces the round deadline."""
+    def inject(cosim: CoSim) -> None:
+        for t, i in zip(times, devices):
+            if t < cosim.cfg.duration_s and i < cosim.proc.topo.n_devices:
+                cosim.schedule_straggler(t, i, factor)
+    return Scenario("straggler",
+                    f"devices {tuple(devices)} slow {factor}x mid-round; "
+                    "deadline-based drop", inject)
+
+
+def mobility_scenario(moves: Sequence[Tuple[float, int, int]] = (
+        (25.0, 7, 0), (55.0, 12, 0), (85.0, 17, 0)),
+        ) -> Scenario:
+    """Devices hand over between LAN edges mid-simulation — by default
+    *into* the already-hot zone, compounding its overload — each paying
+    the modeled handover cost; the reactive loop re-clusters around the
+    new cost structure, budget permitting."""
+    def inject(cosim: CoSim) -> None:
+        m = cosim.proc.topo.n_edges
+        for t, i, j in moves:
+            if (t < cosim.cfg.duration_s
+                    and i < cosim.proc.topo.n_devices and j < m):
+                cosim.schedule_device_move(t, i, j)
+    return Scenario("mobility",
+                    f"{len(tuple(moves))} device handovers between LAN "
+                    "edges (with handover cost)", inject)
+
+
+def multi_tenant_scenario(job_rate_per_edge: float = 1.0 / 25.0,
+                          share: float = 0.45,
+                          mean_duration_s: float = 8.0,
+                          seed_offset: int = 7919) -> Scenario:
+    """Co-located third-party workloads: each edge receives its own
+    Poisson stream of tenant jobs, each claiming ``share`` of the edge's
+    compute for an exponential duration — extra interference-model
+    demand sources that serving (and aggregation) must time-share
+    with.  Drawn from a child generator of the co-sim seed, so the
+    stream is deterministic and does not perturb the co-sim's own
+    draws."""
+    def inject(cosim: CoSim) -> None:
+        rng = np.random.default_rng(cosim.cfg.seed + seed_offset)
+        horizon = cosim.cfg.duration_s
+        tid = 0
+        for j in sorted(cosim.proc.edges):
+            t = 0.0
+            while True:
+                t += rng.exponential(1.0 / job_rate_per_edge)
+                if t >= horizon:
+                    break
+                dur = rng.exponential(mean_duration_s)
+                cosim.schedule_tenant_load(t, j, share, duration_s=dur,
+                                           tenant=f"{j}.{tid}")
+                tid += 1
+    return Scenario("multi_tenant",
+                    f"Poisson tenant jobs per edge ({share:.0%} share, "
+                    f"~{mean_duration_s:.0f}s each)", inject)
+
+
+def churn_scenario(drift_t: float = 30.0,
+                   straggler: Tuple[float, int, float] = (22.0, 0, 4.0),
+                   move: Tuple[float, int, int] = (50.0, 7, 2),
+                   ) -> Scenario:
+    """Everything at once — drift, a straggler and a handover on top of
+    the tenant stream — the regime where an unmetered reactive loop
+    overspends on migrations and the budget has to ration them."""
+    tenants = multi_tenant_scenario()
+
+    def inject(cosim: CoSim) -> None:
+        tenants.inject(cosim)
+        if drift_t < cosim.cfg.duration_s:
+            cosim.schedule_drift(drift_t)
+        t, i, f = straggler
+        if t < cosim.cfg.duration_s:
+            cosim.schedule_straggler(t, i, f)
+        t, i, j = move
+        if t < cosim.cfg.duration_s and j < cosim.proc.topo.n_edges:
+            cosim.schedule_device_move(t, i, j)
+    return Scenario("churn", "drift + straggler + handover + tenant "
+                    "jobs (budget stress)", inject)
+
+
+SCENARIOS: Dict[str, Callable[[], Scenario]] = {
+    "baseline": baseline_scenario,
+    "straggler": straggler_scenario,
+    "mobility": mobility_scenario,
+    "multi_tenant": multi_tenant_scenario,
+    "churn": churn_scenario,
+}
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def default_budget_total(m: int = 4, reconfigs: int = 2,
+                         cfg: Optional[CoSimConfig] = None) -> float:
+    """A budget worth ``reconfigs`` full-continuum migrations — the
+    knob the benchmark grid sweeps."""
+    cfg = cfg if cfg is not None else CoSimConfig()
+    return cfg.reconfig_s * cfg.interference.migration_share * m * reconfigs
+
+
+def run_scenario(scenario: Scenario, policy: str = "reactive",
+                 seed: int = 0, duration_s: float = 120.0,
+                 budget_total: Optional[float] = None,
+                 n: int = 20, m: int = 4, hot: float = 3.0,
+                 slack: float = 1.35, training: bool = True,
+                 p95_threshold_ms: float = 20.0,
+                 rx_policy: Optional[ReactivePolicy] = None,
+                 ) -> ScenarioResult:
+    """One (scenario, policy, seed) cell of the grid."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
+    topo, loc, lam, r = hot_zone_topology(seed=seed, n=n, m=m, hot=hot,
+                                          slack=slack)
+    cfg = CoSimConfig(duration_s=duration_s, seed=seed)
+    sched = continual_training(duration_s, l=topo.l) if training else None
+
+    reactive, budget, ctl = None, None, None
+    if policy != "static":
+        ctl = LearningController(
+            inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=topo.l)
+        ctl.deployment = Deployment.from_topology(topo)
+        reactive = ReactiveLoop(
+            ctl, policy=rx_policy if rx_policy is not None
+            else ReactivePolicy(p95_threshold_ms=p95_threshold_ms))
+        if policy == "budgeted":
+            budget = ReconfigBudget(
+                total=budget_total if budget_total is not None
+                else default_budget_total(m=m, cfg=cfg))
+
+    cosim = CoSim(topo, cfg, schedule=sched, reactive=reactive,
+                  budget=budget)
+    scenario.inject(cosim)
+    res = cosim.run()
+
+    log = res.log
+    return ScenarioResult(
+        name=scenario.name, policy=policy, seed=seed,
+        p50=log.percentile_latency(50), p95=log.percentile_latency(95),
+        p99=log.percentile_latency(99), mean_ms=log.mean_latency(),
+        n_requests=int(log.t.size),
+        rounds_completed=res.rounds_completed,
+        reclusters=ctl.recluster_count if ctl is not None else 0,
+        budget_total=budget.total if budget is not None else math.inf,
+        budget_spent=budget.spent if budget is not None else 0.0,
+        budget_vetoes=budget.vetoes if budget is not None else 0,
+        drops=len(res.drop_log), moves=len(res.move_log),
+        actions=res.actions, trace=res.trace, log=log)

@@ -107,6 +107,46 @@ def test_percentile_latency():
     assert win.shape[1] == 2 and np.all(np.diff(win[:, 0]) > 0)
 
 
+def _empty_log():
+    from repro.routing.simulator import RequestLog
+    return RequestLog(t=np.zeros(0), device=np.zeros(0, int),
+                      tier=np.zeros(0, int), rule=[],
+                      latency_ms=np.zeros(0))
+
+
+def test_empty_log_accessors_return_nan():
+    """Short co-sim smoke runs can serve zero requests; reporting must
+    return NaN cleanly instead of crashing or warning (regression)."""
+    import math
+    import warnings
+    log = _empty_log()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # RuntimeWarning -> fail
+        assert math.isnan(log.mean_latency())
+        assert math.isnan(log.std_latency())
+        assert math.isnan(log.percentile_latency(95))
+        pct = log.latency_percentiles()
+        assert set(pct) == {"p50", "p95", "p99"}
+        assert all(math.isnan(v) for v in pct.values())
+        assert all(math.isnan(v) for v in log.tier_fractions().values())
+        assert log.windowed_percentile(5.0).shape == (0, 2)
+
+
+def test_windowed_percentile_emits_nan_rows_for_empty_windows():
+    """Arrival gaps used to be silently dropped from the timeline; they
+    must surface as NaN rows so the window grid stays uniform."""
+    from repro.routing.simulator import RequestLog
+    log = RequestLog(t=np.array([1.0, 25.0]), device=np.zeros(2, int),
+                     tier=np.zeros(2, int), rule=["R2-local"] * 2,
+                     latency_ms=np.array([10.0, 20.0]))
+    win = log.windowed_percentile(10.0, 95)
+    assert win.shape == (3, 2)
+    assert np.array_equal(win[:, 0], [0.0, 10.0, 20.0])
+    assert win[0, 1] == pytest.approx(10.0)
+    assert np.isnan(win[1, 1])
+    assert win[2, 1] == pytest.approx(20.0)
+
+
 # ---------------------------------------------------------------------------
 # round timeline
 # ---------------------------------------------------------------------------

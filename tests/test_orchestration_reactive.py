@@ -1,7 +1,9 @@
 """Controller reaction paths (paper §III last paragraph): node-failure
 edge-id remapping, capacity-change re-clustering, accuracy-alarm
-threshold semantics, recluster counting, and the reactive loop driving
-the hooks from inside the co-simulation."""
+threshold semantics, recluster counting, the reactive loop driving the
+hooks from inside the co-simulation, and the recluster-accounting
+regressions (cooldown stamping, drift-credit gating, topology->
+inventory edge mapping)."""
 import numpy as np
 import pytest
 
@@ -10,7 +12,8 @@ from repro.core.topology import ClusterTopology
 from repro.orchestration import (DeviceNode, EdgeNode, Inventory,
                                  LearningController, random_inventory)
 from repro.orchestration.controller import Deployment
-from repro.sim import CoSim, CoSimConfig, ReactiveLoop, ReactivePolicy
+from repro.sim import (AccuracyModel, CoSim, CoSimConfig, ReactiveLoop,
+                       ReactivePolicy, ReconfigBudget)
 
 
 def _controller(n=16, m=4, seed=0):
@@ -217,6 +220,140 @@ def test_external_capacity_change_survives_restore():
     res = cosim.run()
     assert any("restored" in a for _, a in res.actions)
     assert ctl.inventory.edges[1].capacity_rps == pytest.approx(new_rps)
+
+
+# ---------------------------------------------------------------------------
+# regression: every recluster path stamps the cooldown
+# ---------------------------------------------------------------------------
+
+def test_failure_recluster_stamps_cooldown():
+    """A failure-driven recluster opens a migration window; the p95
+    alarm must not fire a second recluster inside the cooldown and
+    double-pay migration_share + reconfig_penalty_ms (regression: only
+    the latency path used to stamp ``last_recluster_t``)."""
+    topo, ctl = _scenario(slack=1.8)
+    cooldown = 30.0
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=10.0, cooldown_s=cooldown))  # alarm-prone
+    from repro.fl import round_schedule
+    sched = round_schedule(rounds=3, l=2, local_epochs=5, epoch_s=3.5,
+                           upload_s=2.0, gap_s=2.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=sched, reactive=loop)
+    cosim.schedule_failure(15.0, edge_id=1)
+    res = cosim.run()
+    t_fail = next(t for t, a in res.actions if "failed" in a)
+    latency_after = [t for t, a in res.actions
+                     if "latency alarm" in a and "reclustered" in a
+                     and t > t_fail]
+    assert all(t >= t_fail + cooldown for t in latency_after)
+    # the failure recluster itself is exempt (correctness), but no
+    # *optional* swap lands inside its still-open migration window
+    assert not any(t_fail < t < t_fail + cooldown
+                   for t in res.reconfig_times)
+
+
+def test_capacity_recluster_stamps_cooldown():
+    topo, ctl = _scenario()
+    cooldown = 25.0
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=10.0, cooldown_s=cooldown))
+    from repro.fl import round_schedule
+    sched = round_schedule(rounds=3, l=2, local_epochs=5, epoch_s=3.5,
+                           upload_s=2.0, gap_s=2.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=sched, reactive=loop)
+    new_rps = ctl.inventory.edges[1].capacity_rps * 0.8
+    cosim.schedule_capacity_change(9.0, edge_id=1, new_rps=new_rps)
+    res = cosim.run()
+    t_cap = next(t for t, a in res.actions if "capacity ->" in a)
+    assert t_cap == pytest.approx(9.0)
+    # no optional swap inside the capacity recluster's cooldown
+    assert not any(t_cap < t < t_cap + cooldown
+                   for t in res.reconfig_times)
+
+
+# ---------------------------------------------------------------------------
+# regression: pre-drift rounds earn no recovery credit
+# ---------------------------------------------------------------------------
+
+def test_pre_drift_round_gets_no_recovery_credit():
+    acc = AccuracyModel(base_mse=0.03, drift_mse=0.12, ramp_s=10.0,
+                        recovery_per_round=0.5)
+    acc.on_drift(t=100.0)
+    acc.on_round_complete(round_start=60.0)      # trained pre-drift
+    assert acc.gap_scale == pytest.approx(1.0)
+    assert acc.mse(200.0) == pytest.approx(0.12)  # gap fully open
+    acc.on_round_complete(round_start=105.0)     # trained post-drift
+    assert acc.gap_scale == pytest.approx(0.5)
+    assert acc.mse(200.0) == pytest.approx(0.075)
+
+
+def test_round_straddling_drift_onset_gets_no_credit_in_cosim():
+    """A training round already running when drift begins completes
+    shortly after the onset, but its data is pre-drift: the modeled MSE
+    must stay on the full ramp until a post-onset round completes."""
+    topo, ctl = _scenario()
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(p95_threshold_ms=1e9))
+    loop.acc.ramp_s = 10.0
+    ctl.accuracy_threshold = 1e9                 # no burst: isolate credit
+    from repro.fl import round_schedule
+    # one round spanning the onset: [0, 17.5+2]; drift at 10
+    sched = round_schedule(rounds=1, l=2, local_epochs=5, epoch_s=3.5,
+                           upload_s=2.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=sched, reactive=loop)
+    cosim.schedule_drift(10.0)
+    res = cosim.run()
+    assert res.rounds_completed == 1
+    assert loop.acc.gap_scale == pytest.approx(1.0)
+    assert res.mse_series[-1, 1] == pytest.approx(loop.acc.drift_mse)
+
+
+# ---------------------------------------------------------------------------
+# regression: bottleneck derate lands on the right physical host after
+# a failure renumbers the inventory under a deferred re-deploy
+# ---------------------------------------------------------------------------
+
+def test_post_failure_bottleneck_derate_maps_to_inventory_edge():
+    """Budget-deferred failure re-deploy: the inventory renumbers (old
+    edges 1..3 -> 0..2) while the co-sim topology still counts 4 edges.
+    A latency derate on topology edge 3 must land on inventory index 2
+    — the silent ``bottleneck >= len(inv_edges)`` guard used to mask
+    exactly this mismatch."""
+    n, m = 8, 4
+    assign = np.arange(n) % m
+    lam = np.ones(n)
+    lam[assign == 3] = 5.0                       # topology edge 3 is hot
+    r = np.array([20.0, 21.0, 22.0, 23.0])      # distinct, identifiable
+    topo = ClusterTopology(assign=assign, n_devices=n, n_edges=m,
+                           lam=lam, r=r, l=2)
+    ctl = LearningController(
+        inventory=Inventory.from_arrays(lam, r, lan_edge=assign), l=2)
+    ctl.deployment = Deployment.from_topology(topo)
+    loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+        p95_threshold_ms=1e9, budget_exempt_failures=False))
+    cosim = CoSim(topo, CoSimConfig(duration_s=30.0, seed=0),
+                  reactive=loop, budget=ReconfigBudget(total=0.0))
+    cosim.schedule_failure(5.0, edge_id=0)
+    cosim.sim.run(until=8.0)
+    # the re-deploy was vetoed: inventory renumbered, topology stale
+    assert len(ctl.inventory.edges) == 3
+    assert loop._edge_to_inv == {1: 0, 2: 1, 3: 2}
+    assert cosim.proc.topo.n_edges == 4
+    # now let a latency derate through and check where it lands
+    cosim.budget = None
+    before = [e.capacity_rps for e in ctl.inventory.edges]
+    assert before == [21.0, 22.0, 23.0]
+    loop._recluster_for_latency(8.0, p95=100.0)
+    after = [e.capacity_rps for e in ctl.inventory.edges]
+    derate = loop.policy.capacity_derate
+    # the hot topology edge 3 is physical inventory index 2
+    assert after[2] == pytest.approx(23.0 * (1.0 - derate))
+    assert after[0] == before[0] and after[1] == before[1]
+    # the applied deployment realigned the numbering
+    assert loop._edge_to_inv == {0: 0, 1: 1, 2: 2}
+    assert cosim.proc.topo.n_edges == 3
 
 
 def test_reactive_repeated_runs_are_reproducible():

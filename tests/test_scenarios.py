@@ -1,0 +1,386 @@
+"""Scenario engine + reconfiguration budget: new event kinds
+(STRAGGLER / DEVICE_MOVE / TENANT_LOAD), their co-sim mechanics and
+reactive-loop reactions, deterministic same-seed traces per scenario,
+and the ReconfigBudget accountant metering every deployment swap."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.topology import ClusterTopology
+from repro.fl import round_schedule
+from repro.orchestration import Inventory, LearningController
+from repro.orchestration.controller import Deployment
+from repro.sim import (CoSim, CoSimConfig, EventKind, InterferenceModel,
+                       ReactiveLoop, ReactivePolicy, ReconfigBudget)
+from repro.sim.scenarios import (SCENARIOS, default_budget_total,
+                                 hot_zone_topology, run_scenario)
+
+
+def _topo(n=8, m=4, cap=20.0, lam=1.0):
+    return ClusterTopology(assign=np.arange(n) % m, n_devices=n, n_edges=m,
+                           lam=np.full(n, float(lam)),
+                           r=np.full(m, float(cap)), l=2)
+
+
+def _one_round(epoch_s=3.0, upload_s=2.0, local_epochs=5):
+    return round_schedule(rounds=1, l=2, local_epochs=local_epochs,
+                          epoch_s=epoch_s, upload_s=upload_s)
+
+
+def _loop_for(topo, lam=None, r=None, loc=None, **policy):
+    lam = lam if lam is not None else topo.lam
+    r = r if r is not None else topo.r
+    loc = loc if loc is not None else topo.assign
+    ctl = LearningController(
+        inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=topo.l)
+    ctl.deployment = Deployment.from_topology(topo)
+    return ctl, ReactiveLoop(ctl, policy=ReactivePolicy(**policy))
+
+
+# ---------------------------------------------------------------------------
+# event-kind ordering: scenario events are state changes, they apply
+# before same-instant arrivals and epoch events
+# ---------------------------------------------------------------------------
+
+def test_scenario_event_kinds_order_before_arrivals():
+    for kind in (EventKind.STRAGGLER, EventKind.DEVICE_MOVE,
+                 EventKind.TENANT_LOAD):
+        assert kind < EventKind.EPOCH_END
+        assert kind < EventKind.REQUEST_ARRIVAL
+
+
+# ---------------------------------------------------------------------------
+# STRAGGLER mechanics
+# ---------------------------------------------------------------------------
+
+def test_straggler_stretches_remaining_epochs():
+    """Without a drop policy the straggler's pending epochs run longer:
+    its last EPOCH_END lands far beyond the nominal compute window."""
+    topo = _topo()
+    cfg = CoSimConfig(duration_s=120.0, seed=0, rate_scale=0.0)
+    plain = CoSim(topo, cfg, schedule=_one_round())
+    plain_res = plain.run()
+    cosim = CoSim(topo, cfg, schedule=_one_round())
+    cosim.schedule_straggler(4.0, device_id=0, factor=10.0)
+    res = cosim.run()
+    def last_epoch_end(trace, node):
+        return max(t for t, kind, n in trace
+                   if kind == "EPOCH_END" and n == node)
+    assert last_epoch_end(plain_res.trace, 0) <= 15.0 + 1e-9
+    assert last_epoch_end(res.trace, 0) > 30.0
+    # other devices keep their nominal timing
+    assert last_epoch_end(res.trace, 1) == pytest.approx(
+        last_epoch_end(plain_res.trace, 1))
+
+
+def test_straggler_reaction_drops_device_at_deadline():
+    topo = _topo()
+    ctl, loop = _loop_for(topo, p95_threshold_ms=1e9)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=_one_round(), reactive=loop)
+    cosim.schedule_straggler(4.0, device_id=0, factor=10.0)
+    # once the in-flight epoch drains, the dropped device is idle again
+    # — its cancelled 10x epochs never claim compute (without the drop
+    # it would still be mid-epoch here, at device_train_share demand)
+    cosim.sim.run(until=30.0)
+    assert cosim.interference.demand(("device", 0)) == pytest.approx(0.0)
+    res = cosim.run()
+    assert len(res.drop_log) == 1
+    t, dev, ridx, dropped = res.drop_log[0]
+    assert dev == 0 and dropped >= 1
+    assert any("dropped" in a and "partial aggregation" in a
+               for _, a in res.actions)
+    # and the round still completes on time (partial aggregation)
+    assert res.rounds_completed == 1
+
+
+def test_straggler_without_pending_epochs_is_noop():
+    """A straggle landing in the upload window (all epochs finished)
+    must not reschedule anything."""
+    topo = _topo()
+    cfg = CoSimConfig(duration_s=40.0, seed=0, rate_scale=0.0)
+    plain = CoSim(topo, cfg, schedule=_one_round()).run()
+    cosim = CoSim(topo, cfg, schedule=_one_round())
+    cosim.schedule_straggler(16.0, device_id=0, factor=10.0)  # upload window
+    res = cosim.run()
+    assert [r for r in res.trace if r[1].startswith("EPOCH")] == \
+        [r for r in plain.trace if r[1].startswith("EPOCH")]
+
+
+# ---------------------------------------------------------------------------
+# DEVICE_MOVE mechanics
+# ---------------------------------------------------------------------------
+
+def test_device_move_rehomes_requests_and_pays_handover():
+    topo = _topo()
+    cfg = CoSimConfig(duration_s=30.0, seed=0)
+    cosim = CoSim(topo, cfg, schedule=_one_round())
+    cosim.schedule_device_move(10.0, device_id=0, new_edge=2)
+    res = cosim.run()
+    assert int(cosim.proc.topo.assign[0]) == 2
+    assert res.move_log == [(10.0, 0, 0, 2)]
+    # the handover interference on the receiving edge was cleared at
+    # the end of the handover window (via the TENANT_LOAD mechanism)
+    assert (10.0 + cfg.handover_s, 2, "handover:0", 0.0) in cosim.tenant_log
+    assert cosim.interference.demand(("edge", 2)) == pytest.approx(0.0)
+    # and the run differs from the move-free one
+    plain = CoSim(topo, cfg, schedule=_one_round())
+    assert not np.array_equal(plain.run().log.latency_ms,
+                              res.log.latency_ms)
+
+
+def test_device_move_updates_inventory_and_reclusters():
+    topo, loc, lam, r = hot_zone_topology(seed=0)
+    ctl, loop = _loop_for(topo, lam=lam, r=r, loc=loc,
+                          p95_threshold_ms=1e9, cooldown_s=0.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=30.0, seed=0),
+                  reactive=loop)
+    cosim.schedule_device_move(10.0, device_id=7, new_edge=0)
+    res = cosim.run()
+    assert ctl.inventory.devices[7].lan_edge == 0
+    assert ctl.recluster_count == 1
+    assert any("handed over" in a for _, a in res.actions)
+    assert any("re-clustered around device 7" in a for _, a in res.actions)
+
+
+def test_device_move_to_unknown_edge_raises():
+    topo = _topo()
+    cosim = CoSim(topo, CoSimConfig(duration_s=10.0, seed=0))
+    cosim.schedule_device_move(1.0, device_id=0, new_edge=99)
+    with pytest.raises(ValueError, match="unknown edge"):
+        cosim.run()
+
+
+def test_pending_move_survives_failure_renumbering():
+    """A DEVICE_MOVE scheduled before a failure-driven recluster names
+    its target by the old numbering; after the topology shrinks it must
+    land on the same physical host (regression: it used to raise or
+    silently re-home to the wrong edge)."""
+    topo, loc, lam, r = hot_zone_topology(seed=0, slack=1.8)
+    ctl, loop = _loop_for(topo, lam=lam, r=r, loc=loc,
+                          p95_threshold_ms=1e9, cooldown_s=0.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=40.0, seed=0),
+                  reactive=loop)
+    cosim.schedule_failure(10.0, edge_id=0)      # edges renumber: 1..3->0..2
+    cosim.schedule_device_move(20.0, device_id=2, new_edge=3)
+    cosim.schedule_device_move(25.0, device_id=3, new_edge=0)  # dead host
+    res = cosim.run()
+    # old edge 3 is topology edge 2 after the recluster
+    moved = [e for t, i, old, e in res.move_log if i == 2]
+    assert moved == [2]
+    assert int(cosim.proc.topo.assign[2]) == 2
+    # the move to the dead host was abandoned, not crashed/misrouted
+    assert not any(i == 3 for _, i, _, _ in res.move_log)
+
+
+def test_deferred_highest_edge_failure_still_remaps_alias():
+    """Dropping the HIGHEST-numbered edge under a deferred re-deploy
+    leaves {0:0,1:1,2:2} in the edge mapping — which must not read as
+    identity: once a later recluster applies the renumbered topology,
+    events naming the dead edge must resolve to 'gone', not crash."""
+    topo, loc, lam, r = hot_zone_topology(seed=0, slack=2.0)
+    ctl, loop = _loop_for(topo, lam=lam, r=r, loc=loc,
+                          p95_threshold_ms=1e9, cooldown_s=0.0,
+                          budget_exempt_failures=False)
+    cosim = CoSim(topo, CoSimConfig(duration_s=40.0, seed=0),
+                  reactive=loop, budget=ReconfigBudget(total=0.0))
+    cosim.schedule_failure(5.0, edge_id=3)       # deferred (budget 0)
+    # this move's recluster applies the renumbered 3-edge topology...
+    cosim.schedule_device_move(15.0, device_id=1, new_edge=2)
+    # ...and this one then names the dead edge: abandon, don't crash
+    cosim.schedule_device_move(25.0, device_id=0, new_edge=3)
+    cosim.sim.run(until=10.0)
+    assert len(ctl.inventory.edges) == 3         # renumbered, topo stale
+    cosim.budget = None                          # budget frees up
+    res = cosim.run()
+    assert cosim.proc.topo.n_edges == 3
+    assert cosim.edge_alias[3] is None
+    assert any(i == 1 for _, i, _, _ in res.move_log)
+    assert not any(i == 0 for _, i, _, _ in res.move_log)
+
+
+def test_repeated_handover_keeps_newer_window():
+    """A second handover before the first window closes supersedes it:
+    the first clear must not strip the second's edge load early."""
+    topo = _topo()
+    cfg = CoSimConfig(duration_s=30.0, seed=0, rate_scale=0.0)
+    cosim = CoSim(topo, cfg)
+    cosim.schedule_device_move(10.0, device_id=0, new_edge=2)
+    cosim.schedule_device_move(11.0, device_id=0, new_edge=3)
+    share = cfg.interference.handover_share
+    cosim.sim.run(until=10.5)
+    assert cosim.interference.demand(("edge", 2)) == pytest.approx(share)
+    cosim.sim.run(until=11.5)                    # superseded: load moved
+    assert cosim.interference.demand(("edge", 2)) == pytest.approx(0.0)
+    assert cosim.interference.demand(("edge", 3)) == pytest.approx(share)
+    cosim.sim.run(until=13.5)                    # first clear is stale
+    assert cosim.interference.demand(("edge", 3)) == pytest.approx(share)
+    cosim.sim.run(until=14.5)                    # second window expires
+    assert cosim.interference.demand(("edge", 3)) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# TENANT_LOAD mechanics
+# ---------------------------------------------------------------------------
+
+def test_tenant_load_stretches_edge_service_and_expires():
+    topo = _topo(cap=6.0, lam=2.0)
+    cfg = CoSimConfig(duration_s=40.0, seed=0)
+    sched = _one_round(epoch_s=6.0)              # devices busy -> R1 offload
+    plain = CoSim(topo, cfg, schedule=sched).run()
+    cosim = CoSim(topo, cfg, schedule=sched)
+    for j in range(topo.n_edges):
+        cosim.schedule_tenant_load(2.0, j, share=0.9, duration_s=35.0,
+                                   tenant=f"job{j}")
+    res = cosim.run()
+    assert res.log.mean_latency() > plain.log.mean_latency()
+    # every job expired: last logged share per source is 0
+    final = {}
+    for t, j, src, share in cosim.tenant_log:
+        final[(j, src)] = share
+    assert all(v == 0.0 for v in final.values())
+
+
+def test_tenant_demand_survives_redeploy():
+    """apply_deployment rebuilds the edge tier but must not evict
+    third-party tenant load — it is external to the training pipeline."""
+    m = InterferenceModel()
+    m.set_demand(("edge", 0), "tenant:ext", 0.4)
+    m.set_demand(("edge", 0), "agg0:1", 0.6)
+    m.clear_tier("edge", keep_prefixes=("tenant:", "handover:"))
+    assert m.demand(("edge", 0)) == pytest.approx(0.4)
+    m.remap_tier("edge", lambda j: j - 1 if j > 0 else None)
+    assert m.demand(("edge", 0)) == pytest.approx(0.0)
+
+
+def test_remap_tier_moves_demand_to_new_ids():
+    m = InterferenceModel()
+    m.set_demand(("edge", 2), "tenant:a", 0.3)
+    m.set_demand(("edge", 0), "tenant:b", 0.2)
+    m.remap_tier("edge", lambda j: None if j == 0 else j - 1)
+    assert m.demand(("edge", 1)) == pytest.approx(0.3)
+    assert m.demand(("edge", 0)) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# ReconfigBudget accountant
+# ---------------------------------------------------------------------------
+
+def test_budget_charges_and_vetoes():
+    b = ReconfigBudget(total=15.0)
+    assert b.charge(1.0, 10.0, "first")          # affordable
+    assert not b.charge(2.0, 10.0, "second")     # vetoed: only 5 left
+    assert b.spent == pytest.approx(10.0)
+    assert b.remaining == pytest.approx(5.0)
+    assert b.charge(3.0, 10.0, "forced", forced=True)  # overruns visibly
+    assert b.spent == pytest.approx(20.0)
+    assert b.remaining == 0.0
+    assert b.reconfigs == 2 and b.vetoes == 1
+    assert [e.applied for e in b.ledger] == [True, False, True]
+
+
+def test_apply_deployment_vetoed_leaves_topology_untouched():
+    topo, loc, lam, r = hot_zone_topology(seed=0)
+    budget = ReconfigBudget(total=0.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=10.0, seed=0),
+                  budget=budget)
+    ctl = LearningController(
+        inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=2)
+    dep = ctl.deploy()
+    before = cosim.proc.topo
+    assert cosim.apply_deployment(dep) is False
+    assert cosim.proc.topo is before
+    assert cosim.reconfig_times == []
+    assert budget.vetoes == 1 and budget.spent == 0.0
+
+
+def test_budgeted_policy_spends_at_most_budget_and_defers():
+    sc = SCENARIOS["mobility"]()
+    unconstrained = run_scenario(sc, policy="reactive", seed=0,
+                                 duration_s=60.0)
+    capped = run_scenario(sc, policy="budgeted", seed=0, duration_s=60.0,
+                          budget_total=10.0)   # one migration's worth
+    assert capped.budget_spent <= capped.budget_total + 1e-9
+    assert capped.budget_vetoes >= 1
+    assert capped.reclusters < unconstrained.reclusters
+    assert any("deferred" in a for _, a in capped.actions)
+
+
+def test_budget_exempt_failure_forces_through_spent_budget():
+    topo, loc, lam, r = hot_zone_topology(seed=0, slack=1.8)
+    ctl, loop = _loop_for(topo, lam=lam, r=r, loc=loc,
+                          p95_threshold_ms=1e9)
+    budget = ReconfigBudget(total=0.0)
+    cosim = CoSim(topo, CoSimConfig(duration_s=40.0, seed=0),
+                  reactive=loop, budget=budget)
+    cosim.schedule_failure(15.0, edge_id=0)
+    res = cosim.run()
+    assert ctl.recluster_count == 1              # went through regardless
+    assert len(res.reconfig_times) == 1
+    assert budget.spent > budget.total           # overrun is visible
+    assert [e.forced for e in budget.ledger if e.applied] == [True]
+
+
+# ---------------------------------------------------------------------------
+# determinism: every scenario x policy cell reproduces its trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["straggler", "mobility", "multi_tenant",
+                                  "churn"])
+def test_scenario_traces_deterministic_per_seed(name):
+    sc = SCENARIOS[name]()
+    for policy in ("static", "budgeted"):
+        a = run_scenario(sc, policy=policy, seed=3, duration_s=45.0)
+        b = run_scenario(sc, policy=policy, seed=3, duration_s=45.0)
+        assert a.fingerprint() == b.fingerprint()
+        assert a.trace == b.trace
+    # a different seed genuinely changes the run
+    c = run_scenario(sc, policy="budgeted", seed=4, duration_s=45.0)
+    assert c.fingerprint() != a.fingerprint()
+
+
+def test_mixed_event_kinds_deterministic_trace():
+    """One co-sim with every scenario event kind on the timeline still
+    reproduces bit-for-bit."""
+    def once():
+        # slack high enough that the post-failure, post-derate instance
+        # stays feasible for the surviving three edges
+        topo, loc, lam, r = hot_zone_topology(seed=1, slack=2.2)
+        ctl, loop = _loop_for(topo, lam=lam, r=r, loc=loc,
+                              p95_threshold_ms=25.0)
+        cosim = CoSim(topo, CoSimConfig(duration_s=50.0, seed=1),
+                      schedule=round_schedule(rounds=2, l=2, local_epochs=5,
+                                              epoch_s=3.5, upload_s=2.0,
+                                              gap_s=2.0),
+                      reactive=loop, budget=ReconfigBudget(total=30.0))
+        cosim.schedule_straggler(5.0, 0, 6.0)
+        cosim.schedule_device_move(12.0, 7, 0)
+        cosim.schedule_tenant_load(8.0, 1, 0.5, duration_s=15.0)
+        cosim.schedule_drift(20.0)
+        cosim.schedule_failure(35.0, edge_id=2)
+        res = cosim.run()
+        return res, ctl
+    a, ctl_a = once()
+    b, ctl_b = once()
+    assert a.trace == b.trace
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+    assert a.actions == b.actions
+    assert ctl_a.recluster_count == ctl_b.recluster_count
+    assert [(e.t, e.cost, e.applied) for e in a.budget.ledger] == \
+        [(e.t, e.cost, e.applied) for e in b.budget.ledger]
+
+
+def test_budget_capped_recovers_fraction_of_gain():
+    """The acceptance claim: the budgeted policy spends <= its budget
+    and still recovers a positive fraction of the unconstrained
+    policy's p95 gain over static."""
+    sc = SCENARIOS["mobility"]()
+    st = run_scenario(sc, policy="static", seed=0, duration_s=120.0)
+    rx = run_scenario(sc, policy="reactive", seed=0, duration_s=120.0)
+    bd = run_scenario(sc, policy="budgeted", seed=0, duration_s=120.0,
+                      budget_total=default_budget_total())
+    gain = st.p95 - rx.p95
+    assert gain > 0
+    assert bd.budget_spent <= bd.budget_total + 1e-9
+    assert (st.p95 - bd.p95) / gain > 0.5
