@@ -1,8 +1,14 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and a JSON
+results registry so CI can record the perf trajectory as an artifact
+(``benchmarks/run.py --json BENCH_cosim.json``)."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
+
+#: every ``emit`` lands here too; ``write_json`` snapshots it.
+RESULTS: List[Dict[str, object]] = []
 
 
 def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
@@ -15,5 +21,38 @@ def time_us(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
+def _derived_fields(derived: str) -> Dict[str, object]:
+    """Parse the ``k=v;k=v`` derived string, keeping numeric values as
+    numbers (so the JSON artifact is machine-comparable across runs)."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    row: Dict[str, object] = {"name": name,
+                              "us_per_call": float(us_per_call)}
+    row.update(_derived_fields(derived))
+    RESULTS.append(row)
+
+
+def write_json(path: str) -> None:
+    """Snapshot every emitted benchmark row to ``path`` as
+    ``{name: {us_per_call, ...derived fields...}}`` — the perf record
+    CI uploads (``requests_per_s`` rows carry the event-engine
+    throughput the soft floor in ``scripts/ci.sh`` checks)."""
+    payload = {}
+    for row in RESULTS:
+        payload[str(row["name"])] = {k: v for k, v in row.items()
+                                     if k != "name"}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

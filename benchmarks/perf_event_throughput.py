@@ -1,0 +1,133 @@
+"""Request-engine throughput: vectorized batched plane vs per-request
+heap, on the paper's Fig. 7 configuration.
+
+Measures end-to-end ``simulate()`` wall-clock (arrival generation,
+routing, admission, service, logging) for both engines on the same
+seeded workload and reports simulated requests per second, the
+batched/heap speedup, and the distributional parity (p50/p95 relative
+difference, tier fractions).  A second section runs the full
+co-simulation (training interference + reactive loop) both ways and
+checks the stronger co-sim guarantee: **bit-identical** request logs
+and control-plane trace fingerprints — there routing is deterministic
+and the batched engine consumes the RTT stream in heap order.
+
+  python -m benchmarks.perf_event_throughput             # full (~1 min)
+  python -m benchmarks.perf_event_throughput --smoke     # CI seconds
+  python -m benchmarks.perf_event_throughput --rate-scale 100  # 10^6 reqs
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import solve_heuristic
+from repro.core.topology import ClusterTopology
+from repro.routing import SimConfig, simulate
+from repro.sim.events import control_trace
+from repro.sim.scenarios import SCENARIOS, run_scenario
+
+from benchmarks.common import emit
+from benchmarks.fig7_inference_latency import build_scenario
+
+
+def fig7_topology(seed: int = 0) -> ClusterTopology:
+    """The Fig. 7 hot-zone continuum under the HFLOP assignment."""
+    inst, _ = build_scenario(seed)
+    sol = solve_heuristic(inst)
+    return ClusterTopology(assign=np.asarray(sol.assign),
+                           n_devices=inst.n, n_edges=inst.m,
+                           lam=inst.lam, r=inst.r, l=inst.l)
+
+
+def run(duration_s: float = 600.0, rate_scale: float = 1.0, seed: int = 0,
+        parity_scenarios: Tuple[str, ...] = ("straggler", "churn"),
+        parity_duration_s: float = 60.0) -> Dict[str, float]:
+    """One engine-vs-engine measurement + parity check.  Returns the
+    headline numbers (also CSV-emitted)."""
+    topo = fig7_topology(seed)
+    out: Dict[str, float] = {}
+    logs = {}
+    for engine in ("heap", "batched"):
+        cfg = SimConfig(duration_s=duration_s, seed=seed, engine=engine,
+                        rate_scale=rate_scale)
+        t0 = time.perf_counter()
+        log = simulate(topo, cfg)
+        wall = time.perf_counter() - t0
+        logs[engine] = log
+        rps = log.t.size / wall if wall > 0 else float("inf")
+        out[f"{engine}_requests_per_s"] = rps
+        emit(f"event_engine_{engine}", wall * 1e6,
+             f"requests={log.t.size};wall_s={wall:.3f};"
+             f"requests_per_s={rps:.0f};rate_scale={rate_scale:g}")
+    speedup = (out["batched_requests_per_s"]
+               / max(out["heap_requests_per_s"], 1e-9))
+    out["speedup"] = speedup
+    emit("event_engine_speedup", speedup,
+         f"speedup={speedup:.1f};target=50")
+
+    # distributional parity on the inference-only path (the busy coin
+    # flip interleaves generator draws differently per engine, so the
+    # logs agree in distribution, not bit-for-bit)
+    lh, lb = logs["heap"], logs["batched"]
+    p50h, p50b = lh.percentile_latency(50), lb.percentile_latency(50)
+    p95h, p95b = lh.percentile_latency(95), lb.percentile_latency(95)
+    d50 = abs(p50h - p50b) / max(p50h, 1e-9)
+    d95 = abs(p95h - p95b) / max(p95h, 1e-9)
+    tiers_match = np.array_equal(lh.tier, lb.tier)
+    out["p50_rel_diff"], out["p95_rel_diff"] = d50, d95
+    emit("event_engine_parity_simulate", max(d50, d95) * 1e6,
+         f"p50_rel_diff={d50:.5f};p95_rel_diff={d95:.5f};"
+         f"tiers_identical={'yes' if tiers_match else 'NO'};tol=0.01")
+
+    # bit-exact parity on the co-sim path, across the scenario engine
+    all_bit = True
+    for sc_name in parity_scenarios:
+        for policy in ("reactive", "budgeted"):
+            rb = run_scenario(SCENARIOS[sc_name](), policy=policy,
+                              seed=seed, duration_s=parity_duration_s,
+                              engine="batched")
+            rh = run_scenario(SCENARIOS[sc_name](), policy=policy,
+                              seed=seed, duration_s=parity_duration_s,
+                              engine="heap")
+            bit = (rb.control_fingerprint() == rh.control_fingerprint()
+                   and np.array_equal(rb.log.latency_ms, rh.log.latency_ms)
+                   and control_trace(rb.trace) == control_trace(rh.trace))
+            all_bit &= bit
+            emit(f"event_engine_parity_{sc_name}_{policy}",
+                 0.0 if bit else 1.0,
+                 f"control_fp_identical={'yes' if bit else 'NO'};"
+                 f"n_requests={rb.log.t.size}")
+    out["cosim_bit_identical"] = 1.0 if all_bit else 0.0
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="lambda multiplier (100 -> ~10^6 requests; "
+                         "the heap side is what takes the time)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI sizes (shorter horizon)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        out = run(duration_s=240.0, rate_scale=args.rate_scale,
+                  seed=args.seed, parity_duration_s=45.0)
+    else:
+        out = run(duration_s=args.duration, rate_scale=args.rate_scale,
+                  seed=args.seed)
+    print(f"\nbatched {out['batched_requests_per_s']:,.0f} req/s vs heap "
+          f"{out['heap_requests_per_s']:,.0f} req/s -> "
+          f"{out['speedup']:.1f}x; p50/p95 parity "
+          f"{out['p50_rel_diff']:.5f}/{out['p95_rel_diff']:.5f}; "
+          f"co-sim bit-identical: "
+          f"{'yes' if out['cosim_bit_identical'] else 'NO'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast co-sim smoke only (CI entry: exercises the "
                          "event core + reactive loop in seconds)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write every emitted row to PATH as JSON "
+                         "(name -> us_per_call + derived fields, incl. "
+                         "the event-engine requests/sec) — the perf "
+                         "trajectory artifact CI uploads")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
@@ -35,6 +40,11 @@ def main() -> None:
               "multi-tenant / budget) ---", file=sys.stderr)
         from benchmarks import perf_scenarios
         perf_scenarios.run(duration_s=60.0)
+        print("# --- event-engine throughput smoke (batched vs heap) ---",
+              file=sys.stderr)
+        from benchmarks import perf_event_throughput
+        perf_event_throughput.run(duration_s=240.0, parity_duration_s=45.0)
+        _maybe_write_json(args.json)
         return
 
     print("# --- Fig. 2: HFLOP solver scaling ---", file=sys.stderr)
@@ -70,6 +80,11 @@ def main() -> None:
         fig6_continual_fl.run_continual_vs_static(
             rounds=12 if args.full else 4)
 
+    print("# --- event-engine throughput (batched vs heap) ---",
+          file=sys.stderr)
+    from benchmarks import perf_event_throughput
+    perf_event_throughput.run(duration_s=600.0 if args.full else 240.0)
+
     print("# --- co-sim: training-inference interference ---",
           file=sys.stderr)
     from benchmarks import perf_cosim_interference
@@ -101,6 +116,15 @@ def main() -> None:
              + ";".join(f"{k}:{len(v)}" for k, v in s["dominant"].items()))
     except Exception as e:  # noqa: BLE001
         print(f"# roofline summary unavailable: {e}", file=sys.stderr)
+
+    _maybe_write_json(args.json)
+
+
+def _maybe_write_json(path) -> None:
+    if path:
+        from benchmarks.common import write_json
+        write_json(path)
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

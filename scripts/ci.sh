@@ -8,6 +8,32 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 
-# fast co-sim smoke: exercises the event core, interference model and
-# reactive loop end-to-end on every CI run (seconds, CSV to stdout)
-python -m benchmarks.run --smoke
+# fast co-sim smoke: exercises the event core, interference model,
+# reactive loop and the batched request engine end-to-end on every CI
+# run (seconds, CSV to stdout, JSON perf record to BENCH_cosim.json)
+python -m benchmarks.run --smoke --json BENCH_cosim.json
+
+# soft events-per-second floor on the batched engine: a regression
+# below the floor prints a loud warning (and shows up in the uploaded
+# BENCH_cosim.json trajectory) but does not fail CI — shared runners
+# are too noisy for a hard perf gate.
+python - <<'EOF'
+import json
+
+FLOOR_REQ_PER_S = 300_000.0   # batched engine, Fig. 7 smoke config
+data = json.load(open("BENCH_cosim.json"))
+row = data.get("event_engine_batched", {})
+rps = row.get("requests_per_s")
+if rps is None:
+    print("WARNING: no batched event-engine throughput in "
+          "BENCH_cosim.json")
+elif rps < FLOOR_REQ_PER_S:
+    print(f"WARNING: batched event engine at {rps:,.0f} simulated "
+          f"req/s — below the soft floor of {FLOOR_REQ_PER_S:,.0f}")
+else:
+    print(f"event engine throughput OK: {rps:,.0f} simulated req/s "
+          f">= soft floor {FLOOR_REQ_PER_S:,.0f}")
+speedup = data.get("event_engine_speedup", {}).get("speedup")
+if speedup is not None:
+    print(f"batched/heap speedup: {speedup:.1f}x")
+EOF

@@ -68,9 +68,13 @@ class HFLOPSolution:
 
     @property
     def y(self) -> np.ndarray:
-        m = 1 + (self.assign.max() if self.assign.size else -1)
-        return np.asarray([np.any(self.assign == j)
-                           for j in range(m)], bool)
+        """Open-edge indicator, vectorized — this runs inside every
+        reactive recluster, so no per-edge Python loop."""
+        m = 1 + (int(self.assign.max()) if self.assign.size else -1)
+        if m <= 0:
+            return np.zeros(0, dtype=bool)
+        ok = self.assign >= 0
+        return np.bincount(self.assign[ok], minlength=m).astype(bool)
 
     def x_matrix(self, m: int) -> np.ndarray:
         n = self.assign.shape[0]
@@ -90,7 +94,9 @@ def objective(inst: HFLOPInstance, assign: np.ndarray) -> float:
 
 
 def violations(inst: HFLOPInstance, assign: np.ndarray) -> List[str]:
-    """Empty list iff ``assign`` is feasible."""
+    """Empty list iff ``assign`` is feasible.  Per-edge loads come from
+    one ``np.bincount`` instead of an m-pass scan — this is on the
+    reactive-recluster hot path."""
     out = []
     assign = np.asarray(assign)
     if assign.shape != (inst.n,):
@@ -100,10 +106,11 @@ def violations(inst: HFLOPInstance, assign: np.ndarray) -> List[str]:
     participating = int(np.sum(assign >= 0))
     if participating < inst.T:
         out.append(f"participation {participating} < T={inst.T}")
-    for j in range(inst.m):
-        load = float(np.sum(inst.lam[assign == j]))
-        if load > inst.r[j] + 1e-9:
-            out.append(f"edge {j}: load {load:.3f} > r={inst.r[j]:.3f}")
+    valid = (assign >= 0) & (assign < inst.m)
+    loads = np.bincount(assign[valid], weights=inst.lam[valid],
+                        minlength=inst.m)
+    for j in np.nonzero(loads > inst.r + 1e-9)[0]:
+        out.append(f"edge {j}: load {loads[j]:.3f} > r={inst.r[j]:.3f}")
     return out
 
 

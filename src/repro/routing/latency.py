@@ -49,6 +49,19 @@ class LatencyModel:
             return self.base_infer_ms * self.device_slowdown
         return self.base_infer_ms
 
+    def occupancy_dependent(self, tier: str) -> bool:
+        """Whether ``infer_ms`` on ``tier`` varies with occupancy — the
+        batched request engine takes its fully vectorized path only
+        when it does not."""
+        return False
+
+    def infer_ms_array(self, tier: str, occupancy: np.ndarray,
+                       ) -> np.ndarray:
+        """Vectorized :meth:`infer_ms` over an occupancy array (the
+        constant model broadcasts one scalar)."""
+        occupancy = np.asarray(occupancy, dtype=np.float64)
+        return np.full(occupancy.shape, self.infer_ms(tier))
+
     def forward_hop_ms(self, rng: np.random.Generator) -> float:
         """Edge->cloud forwarding hop (R3 overflow): the request pays the
         edge leg plus the cloud leg."""
@@ -95,3 +108,15 @@ class CalibratedLatencyModel(LatencyModel):
         slots = max(self.tier_slots.get(tier, 1), 1)
         oversubscription = max((occupancy + 1.0) / slots, 1.0)
         return base * oversubscription
+
+    def occupancy_dependent(self, tier: str) -> bool:
+        return tier in self.tier_service_ms
+
+    def infer_ms_array(self, tier: str, occupancy: np.ndarray,
+                       ) -> np.ndarray:
+        base = self.tier_service_ms.get(tier)
+        if base is None:
+            return super().infer_ms_array(tier, occupancy)
+        slots = max(self.tier_slots.get(tier, 1), 1)
+        occupancy = np.asarray(occupancy, dtype=np.float64)
+        return base * np.maximum((occupancy + 1.0) / slots, 1.0)

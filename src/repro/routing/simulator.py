@@ -7,17 +7,32 @@ generator: ``serving.workload.poisson_requests``).  Requests are routed
 by rules R1-R3 (``repro.routing.rules``); edges have finite concurrent-
 processing capacity derived from r_j; the cloud is infinite.
 
-Since the co-simulation subsystem landed, this module is a thin
-inference-only configuration of the shared event core
-(``repro.sim.events``): :class:`RequestProcessor` holds the routing +
-service logic, and :func:`simulate` wires it to a coin-flip training
-signal (``busy_fraction``).  ``repro.sim.cosim`` reuses the same
-processor but drives the busy flag from an actual training round
-timeline and the service times through an interference model.
+This module is a thin inference-only configuration of the shared event
+engine: :class:`RequestProcessor` holds the routing + service logic
+behind two interchangeable engines —
+
+  ``batched``  (default) the vectorized macro-event request plane
+               (``repro.sim.request_plane``): arrivals are pre-drawn
+               columnar arrays, processed in NumPy batches over the
+               windows between control-plane heap events; ~50-100x the
+               simulated-requests/sec of the heap at Fig. 7 scale
+               (``benchmarks/perf_event_throughput.py``);
+  ``heap``     the original per-request event path (one
+               ``REQUEST_ARRIVAL`` + ``REQUEST_COMPLETION`` heap event
+               per request) — the *parity* reference the batched
+               engine is validated against (``tests/
+               test_event_engine.py``).
+
+``repro.sim.cosim`` reuses the same processor but drives the busy flag
+from an actual training round timeline and the service times through
+an interference model; there the two engines are bit-identical because
+routing is deterministic and the batched RTT draws consume the shared
+generator stream in exactly the heap path's order.
 """
 from __future__ import annotations
 
 import math
+import heapq
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -26,8 +41,15 @@ import numpy as np
 from repro.core.topology import ClusterTopology
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import EdgeState, RouteDecision, route_request
-from repro.serving.workload import poisson_requests
+from repro.serving.workload import poisson_request_arrays
 from repro.sim.events import Event, EventKind, Simulation
+from repro.sim.request_plane import (RULE_CODE, RULES, TIER_CLOUD,
+                                     TIER_DEVICE, TIER_EDGE, ColumnarLog,
+                                     batched_rtt_draws, bucket_admissions)
+
+ENGINES = ("batched", "heap")
+
+_RULE_NAMES = np.array(RULES, dtype=object)   # code -> str, C-speed take
 
 
 @dataclass
@@ -76,16 +98,21 @@ class RequestLog:
         """(n_windows, 2) array of [window start, p-th percentile latency]
         — the latency timeline the reactive monitors and examples plot.
         Windows without any arrivals are NaN rows (not silently dropped),
-        so the timeline keeps a uniform grid and gaps stay visible."""
+        so the timeline keeps a uniform grid and gaps stay visible.
+
+        Arrival times are nondecreasing (the engines log in arrival
+        order), so each window is a ``searchsorted`` slice instead of a
+        full-log boolean scan."""
         if self.t.size == 0:
             return np.zeros((0, 2))
-        edges = np.arange(0.0, float(self.t.max()) + 1e-9, window_s)
+        edges = np.arange(0.0, float(self.t[-1]) + 1e-9, window_s)
+        bounds = np.searchsorted(self.t, np.append(edges,
+                                                   edges[-1] + window_s))
         rows = []
-        for lo in edges:
-            m = (self.t >= lo) & (self.t < lo + window_s)
-            val = (float(np.percentile(self.latency_ms[m], p))
-                   if np.any(m) else math.nan)
-            rows.append((lo, val))
+        for k, lo in enumerate(edges):
+            sl = self.latency_ms[bounds[k]:bounds[k + 1]]
+            rows.append((lo, float(np.percentile(sl, p)) if sl.size
+                         else math.nan))
         return np.asarray(rows)
 
 
@@ -96,21 +123,31 @@ class SimConfig:
     busy_fraction: float = 1.0       # fraction of time devices train (CL: 1)
     rate_scale: float = 1.0          # Fig. 8b: lambda x 10
     latency: LatencyModel = field(default_factory=LatencyModel)
+    engine: str = "batched"          # "batched" | "heap" (parity)
 
 
 class RequestProcessor:
-    """Routing + service logic for ``REQUEST_ARRIVAL`` events on the
-    event core — shared between the inference-only simulator below and
-    the training–inference co-simulation (``repro.sim.cosim``).
+    """Routing + service logic on the shared event engine — used by the
+    inference-only simulator below and the training–inference
+    co-simulation (``repro.sim.cosim``).
 
-    Pluggable policies:
-      ``busy_fn(device, t)``          -> is the device training right now?
-      ``service_fn(device, dec, occ)`` -> service time in ms (defaults to
-                                          the latency model's ``infer_ms``)
-      ``extra_ms_fn(dec, t, device)`` -> additive penalty (reconfiguration
-                                          and handover cost windows in
-                                          the co-sim)
-    """
+    Two engines share all admission/topology state (the ``EdgeState``
+    dict control-plane handlers mutate) and the columnar log:
+
+      ``heap``     per-request handlers on ``REQUEST_ARRIVAL`` /
+                   ``REQUEST_COMPLETION`` events, driven by the scalar
+                   policies ``busy_fn`` / ``service_fn`` /
+                   ``extra_ms_fn``;
+      ``batched``  pre-drawn arrival arrays (:meth:`add_arrivals`)
+                   processed window-by-window through the simulation's
+                   flush hook, driven by the vectorized policies
+                   ``busy_mask_fn(devices, ts)``,
+                   ``stretch_fn(tier, ids)`` and
+                   ``extra_ms_vec_fn(ts, devices, tiers, edge_ids)``.
+
+    Both log into a :class:`~repro.sim.request_plane.ColumnarLog`
+    (preallocated arrays, arrival order), so telemetry percentiles are
+    incremental either way."""
 
     def __init__(self, topo: ClusterTopology, rng: np.random.Generator,
                  latency: Optional[LatencyModel] = None,
@@ -118,26 +155,67 @@ class RequestProcessor:
                  service_fn: Optional[
                      Callable[[int, RouteDecision, int], float]] = None,
                  extra_ms_fn: Optional[
-                     Callable[[RouteDecision, float, int], float]] = None):
+                     Callable[[RouteDecision, float, int], float]] = None,
+                 engine: str = "batched",
+                 busy_mask_fn: Optional[Callable[
+                     [np.ndarray, np.ndarray], np.ndarray]] = None,
+                 stretch_fn: Optional[Callable[
+                     [str, np.ndarray], np.ndarray]] = None,
+                 extra_ms_vec_fn: Optional[Callable[
+                     [np.ndarray, np.ndarray, np.ndarray, np.ndarray],
+                     np.ndarray]] = None):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; pick from "
+                             f"{ENGINES}")
+        if engine == "batched":
+            # the batched engine only consults the vectorized policies:
+            # a scalar-only caller would silently simulate the default
+            # behavior instead — refuse loudly
+            unpaired = [f"{scalar} (vectorized twin {vec} missing)"
+                        for scalar, vec, s, v in (
+                            ("busy_fn", "busy_mask_fn", busy_fn,
+                             busy_mask_fn),
+                            ("service_fn", "stretch_fn", service_fn,
+                             stretch_fn),
+                            ("extra_ms_fn", "extra_ms_vec_fn",
+                             extra_ms_fn, extra_ms_vec_fn))
+                        if s is not None and v is None]
+            if unpaired:
+                raise ValueError(
+                    "engine='batched' ignores scalar policies: "
+                    + "; ".join(unpaired)
+                    + ". Pass the vectorized policy or engine='heap'.")
+        self.engine = engine
         self.rng = rng
         self.lat = latency if latency is not None else LatencyModel()
         self.busy_fn = busy_fn or (lambda i, t: False)
         self.service_fn = service_fn
         self.extra_ms_fn = extra_ms_fn
+        self.busy_mask_fn = busy_mask_fn
+        self.stretch_fn = stretch_fn
+        self.extra_ms_vec_fn = extra_ms_vec_fn
+        self._cols = ColumnarLog()
+        self._tier_code = {"device": TIER_DEVICE, "edge": TIER_EDGE,
+                           "cloud": TIER_CLOUD}
+        # batched-engine state: the pre-drawn arrival stream + cursor,
+        # and per-edge in-flight completion times (only materialized
+        # when the latency model's edge service is occupancy-dependent)
+        self._arr_t = np.zeros(0, dtype=np.float64)
+        self._arr_dev = np.zeros(0, dtype=np.int64)
+        self._arr_pos = 0
+        self._flush_started = False
+        self._occ_edge = self.lat.occupancy_dependent("edge")
+        self._pending: Dict[int, List[float]] = {}
         self.edges: Dict[int, EdgeState] = {}
         self.set_topology(topo)
-        self._t: List[float] = []
-        self._dev: List[int] = []
-        self._tier: List[int] = []
-        self._rule: List[str] = []
-        self._lat: List[float] = []
-        self._tier_code = {"device": 0, "edge": 1, "cloud": 2}
 
     def set_topology(self, topo: ClusterTopology) -> None:
         """(Re)build admission state — used at start and when the
         reactive loop swaps in a re-clustered deployment.  In-flight
         completions keep a reference to their old ``EdgeState`` (the
-        event payload), so they drain harmlessly after a swap."""
+        event payload), so they drain harmlessly after a swap; the
+        batched engine equivalently drops its per-edge in-flight
+        arrays."""
         self.topo = topo
         self.edges = {}
         for j in topo.open_edges:
@@ -145,10 +223,14 @@ class RequestProcessor:
             # with the request-rate multiplier (the point of Fig. 8b)
             self.edges[int(j)] = EdgeState(
                 capacity_rps=float(topo.r[j]) if topo.r.size else np.inf)
+        self._pending = {}
 
     def bind(self, sim: Simulation) -> None:
-        sim.on(EventKind.REQUEST_ARRIVAL, self.on_arrival)
-        sim.on(EventKind.REQUEST_COMPLETION, self.on_completion)
+        if self.engine == "heap":
+            sim.on(EventKind.REQUEST_ARRIVAL, self.on_arrival)
+            sim.on(EventKind.REQUEST_COMPLETION, self.on_completion)
+        else:
+            sim.set_flush(self.flush_window)
 
     def fail_edge(self, edge_id: int) -> None:
         """Edge host died: zero capacity so R3 overflows to the cloud."""
@@ -156,6 +238,8 @@ class RequestProcessor:
         if st is not None:
             st.capacity_rps = 0.0
             st.tokens = 0.0
+
+    # -- heap ("parity") engine ---------------------------------------------
 
     def on_completion(self, sim: Simulation, ev: Event) -> None:
         ev.payload.in_service -= 1
@@ -183,52 +267,187 @@ class RequestProcessor:
             net = float(self.lat.rtt("device", self.rng))
         if self.extra_ms_fn is not None:
             net += float(self.extra_ms_fn(dec, t, i))
-        self._t.append(t)
-        self._dev.append(i)
-        self._tier.append(self._tier_code[dec.tier])
-        self._rule.append(dec.rule)
-        self._lat.append(net + service)
+        self._cols.append(t, i, self._tier_code[dec.tier],
+                          RULE_CODE[dec.rule], net + service)
+
+    # -- batched engine ------------------------------------------------------
+
+    def add_arrivals(self, t: np.ndarray, device: np.ndarray) -> None:
+        """Hand the batched engine its (time-sorted) arrival stream.
+        May be called several times before the run starts; streams are
+        merged stably."""
+        if self._flush_started:
+            raise RuntimeError("cannot add arrivals after window "
+                               "processing started (the columnar log "
+                               "must stay time-sorted)")
+        if self._arr_t.size:
+            t = np.concatenate([self._arr_t, np.asarray(t, np.float64)])
+            device = np.concatenate([self._arr_dev,
+                                     np.asarray(device, np.int64)])
+            order = np.argsort(t, kind="stable")
+            t, device = t[order], device[order]
+        self._arr_t = np.ascontiguousarray(t, dtype=np.float64)
+        self._arr_dev = np.ascontiguousarray(device, dtype=np.int64)
+
+    def flush_window(self, lo: float, hi: float, inclusive: bool) -> None:
+        """Advance the request plane through one control window: route,
+        admit and serve every pending arrival with ``t < hi``
+        (``t <= hi`` for the inclusive tail window) in one vectorized
+        batch.  Every routing input is constant over the window by
+        construction — its endpoints *are* the control events."""
+        self._flush_started = True
+        hi_idx = int(np.searchsorted(self._arr_t, hi,
+                                     side="right" if inclusive else "left"))
+        if hi_idx <= self._arr_pos:
+            return
+        sl = slice(self._arr_pos, hi_idx)
+        self._arr_pos = hi_idx
+        self._process_window(self._arr_t[sl], self._arr_dev[sl])
+
+    def _stretch_scalar(self, tier: str, node: int) -> float:
+        if self.stretch_fn is None:
+            return 1.0
+        return float(self.stretch_fn(tier, np.asarray([node]))[0])
+
+    def _process_window(self, t: np.ndarray, dev: np.ndarray) -> None:
+        n = t.size
+        assign = self.topo.assign
+        busy = (np.asarray(self.busy_mask_fn(dev, t), dtype=bool)
+                if self.busy_mask_fn is not None
+                else np.zeros(n, dtype=bool))
+        j = np.full(n, -1, dtype=np.int64)
+        valid = (dev >= 0) & (dev < assign.size)
+        j[valid] = assign[dev[valid]]
+
+        tier = np.empty(n, dtype=np.int8)
+        rule = np.empty(n, dtype=np.int8)
+        edge_id = np.full(n, -1, dtype=np.int64)
+        service = np.empty(n, dtype=np.float64)
+        two_hop = np.zeros(n, dtype=bool)
+
+        idle = ~busy                                    # R2: serve locally
+        if idle.any():
+            tier[idle] = TIER_DEVICE
+            rule[idle] = RULE_CODE["R2-local"]
+            s_dev = self.lat.infer_ms("device")
+            if self.stretch_fn is not None:
+                service[idle] = s_dev * self.stretch_fn("device", dev[idle])
+            else:
+                service[idle] = s_dev
+
+        flat = busy & (j < 0)                           # R1 without an edge
+        if flat.any():
+            tier[flat] = TIER_CLOUD
+            rule[flat] = RULE_CODE["R1-flat"]
+
+        eb = busy & (j >= 0)                            # R1 via aggregator
+        if eb.any():
+            base_edge = self.lat.infer_ms("edge")
+            # group window positions by edge in one stable sort (keeps
+            # arrival order within each edge) instead of rescanning the
+            # window once per open edge
+            eb_idx = np.nonzero(eb)[0]
+            order = np.argsort(j[eb_idx], kind="stable")
+            eb_sorted = eb_idx[order]
+            je_sorted = j[eb_sorted]
+            cuts = np.nonzero(np.diff(je_sorted))[0] + 1
+            for m in np.split(eb_sorted, cuts):
+                je = int(j[m[0]])
+                st = self.edges[je]
+                adm = bucket_admissions(t[m], st)
+                a_idx, o_idx = m[adm], m[~adm]
+                tier[a_idx] = TIER_EDGE
+                rule[a_idx] = RULE_CODE["R1"]
+                edge_id[a_idx] = je
+                tier[o_idx] = TIER_CLOUD                # R3 overflow
+                rule[o_idx] = RULE_CODE["R3-overflow"]
+                edge_id[o_idx] = je
+                two_hop[o_idx] = True
+                stretch_e = self._stretch_scalar("edge", je)
+                if self._occ_edge and a_idx.size:
+                    self._serve_occupancy(je, t, a_idx, service, stretch_e)
+                else:
+                    service[a_idx] = base_edge * stretch_e
+
+        cloud = tier == TIER_CLOUD
+        if cloud.any():
+            service[cloud] = (self.lat.infer_ms("cloud")
+                              * self._stretch_scalar("cloud", 0))
+
+        net = batched_rtt_draws(self.rng, self.lat, tier, two_hop)
+        if self.extra_ms_vec_fn is not None:
+            net = net + self.extra_ms_vec_fn(t, dev, tier, edge_id)
+        self._cols.extend(t, dev, tier, rule, net + service)
+
+    def _serve_occupancy(self, je: int, t: np.ndarray, a_idx: np.ndarray,
+                         service: np.ndarray, stretch_e: float) -> None:
+        """Occupancy-dependent (calibrated) edge service: replay the
+        per-edge c-server occupancy exactly — each admitted request
+        sees the completions of its predecessors, so service and
+        occupancy are coupled and the update is sequential per edge
+        (cross-edge and all other work stays vectorized)."""
+        pend = self._pending.setdefault(je, [])
+        st = self.edges[je]
+        for k in a_idx:
+            tk = t[k]
+            while pend and pend[0] <= tk:
+                heapq.heappop(pend)
+            s_k = self.lat.infer_ms("edge", occupancy=len(pend)) * stretch_e
+            service[k] = s_k
+            heapq.heappush(pend, tk + s_k / 1000.0)
+        st.in_service = len(pend)
+
+    # -- shared telemetry / log ---------------------------------------------
 
     def recent_percentile(self, now: float, window_s: float, p: float,
                           min_requests: int = 1,
-                          max_lookback: int = 4096) -> Optional[float]:
+                          max_lookback: Optional[int] = None,
+                          ) -> Optional[float]:
         """p-th latency percentile over requests arriving in
         ``[now - window_s, now]`` — the latency monitors' telemetry.
         None when the window holds fewer than ``min_requests``.
 
-        At most the newest ``max_lookback`` requests are scanned (the
-        monitor fires every few simulated seconds; rescanning the full
-        history each tick would be quadratic).  At arrival rates above
-        ``max_lookback / window_s`` req/s the estimate therefore covers
-        only the newest part of the window — raise ``max_lookback`` if
-        that bias matters for your scenario."""
-        ts = np.asarray(self._t[-max_lookback:])
-        if ts.size == 0:
-            return None
-        m = ts >= now - window_s
-        if int(m.sum()) < min_requests:
-            return None
-        return float(np.percentile(np.asarray(self._lat[-max_lookback:])[m],
-                                   p))
+        Incremental over the columnar log (binary-searched window
+        start from a monotone cursor): a telemetry tick costs
+        O(log n + window), independent of total history.
+        ``max_lookback`` is accepted for backward compatibility and
+        ignored — the scan was capped when it rescanned Python lists;
+        the columnar log makes the exact window affordable."""
+        return self._cols.recent_percentile(now, window_s, p,
+                                            min_requests=min_requests)
 
     def log(self) -> RequestLog:
+        c = self._cols
+        n = c.n
         return RequestLog(
-            t=np.asarray(self._t), device=np.asarray(self._dev, int),
-            tier=np.asarray(self._tier, int), rule=self._rule,
-            latency_ms=np.asarray(self._lat))
+            t=c.t[:n].copy(), device=c.device[:n].copy(),
+            tier=c.tier[:n].astype(np.int64),
+            rule=_RULE_NAMES[c.rule[:n]].tolist(),
+            latency_ms=c.latency_ms[:n].copy())
 
 
 def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:
+    """Inference-only run: Poisson arrivals, coin-flip training signal.
+    ``cfg.engine`` picks the vectorized batched plane (default) or the
+    per-request heap path (parity reference)."""
     rng = np.random.default_rng(cfg.seed)
-    arrivals = poisson_requests(topo.lam * cfg.rate_scale, cfg.duration_s,
-                                rng)
+    t_arr, dev_arr = poisson_request_arrays(topo.lam * cfg.rate_scale,
+                                            cfg.duration_s, rng)
     sim = Simulation()
-    proc = RequestProcessor(
-        topo, rng, latency=cfg.latency,
-        busy_fn=lambda i, t: rng.uniform() < cfg.busy_fraction)
-    proc.bind(sim)
-    for ev in arrivals:
-        sim.schedule(ev.t, EventKind.REQUEST_ARRIVAL, node=ev.device)
+    if cfg.engine == "heap":
+        proc = RequestProcessor(
+            topo, rng, latency=cfg.latency, engine="heap",
+            busy_fn=lambda i, t: rng.uniform() < cfg.busy_fraction)
+        proc.bind(sim)
+        for tt, dd in zip(t_arr, dev_arr):
+            sim.schedule(tt, EventKind.REQUEST_ARRIVAL, node=int(dd))
+    else:
+        proc = RequestProcessor(
+            topo, rng, latency=cfg.latency, engine=cfg.engine,
+            busy_mask_fn=lambda d, t: rng.random(d.size)
+            < cfg.busy_fraction)
+        proc.bind(sim)
+        proc.add_arrivals(t_arr, dev_arr)
     sim.run()
     return proc.log()
 

@@ -8,6 +8,7 @@ consumers — the routing simulator sources its Poisson arrivals from
 import importlib
 
 from repro.serving.workload import (RequestEvent, batched_arrivals,
+                                    poisson_request_arrays,
                                     poisson_requests)
 
 _LAZY = {
@@ -24,7 +25,7 @@ _LAZY = {
     "requests_from_events": "repro.serving.scheduler",
 }
 
-__all__ = ["RequestEvent", "batched_arrivals",
+__all__ = ["RequestEvent", "batched_arrivals", "poisson_request_arrays",
            "poisson_requests"] + list(_LAZY)
 
 

@@ -7,12 +7,15 @@ close that cycle.
 """
 import importlib
 
-from repro.sim.events import Event, EventKind, EventQueue, Simulation
+from repro.sim.events import (Event, EventKind, EventQueue, Simulation,
+                              control_trace)
 
 _LAZY = {
     "CoSim": "repro.sim.cosim",
     "CoSimConfig": "repro.sim.cosim",
     "CoSimResult": "repro.sim.cosim",
+    "ColumnarLog": "repro.sim.request_plane",
+    "bucket_admissions": "repro.sim.request_plane",
     "InterferenceConfig": "repro.sim.interference",
     "InterferenceModel": "repro.sim.interference",
     "AccuracyModel": "repro.sim.reactive",
@@ -26,7 +29,8 @@ _LAZY = {
     "run_scenario": "repro.sim.scenarios",
 }
 
-__all__ = ["Event", "EventKind", "EventQueue", "Simulation"] + list(_LAZY)
+__all__ = ["Event", "EventKind", "EventQueue", "Simulation",
+           "control_trace"] + list(_LAZY)
 
 
 def __getattr__(name):

@@ -18,8 +18,22 @@ modeled replica-migration cost.
 
 Determinism: all randomness flows through one ``np.random.Generator``
 seeded from ``CoSimConfig.seed`` (device speed factors first, then the
-arrival streams, then per-request RTT draws in event order), so the
+arrival streams, then per-request RTT draws in arrival order), so the
 same seed yields an identical event trace and request log.
+
+Engines: the heap carries only the sparse *control plane* (round /
+epoch / aggregation windows, failures, moves, stragglers, tenant load,
+drift, reconfig, telemetry).  With the default ``engine="batched"``
+the dense *request plane* is processed in vectorized batches over the
+windows between control events (``repro.sim.request_plane``); with
+``engine="heap"`` every request rides the heap as two events — the
+parity reference.  Routing and service are deterministic here and the
+batched RTT draws consume the generator stream in heap order, so the
+two engines produce **bit-identical** request logs, reactions and
+control traces for the same seed (asserted in
+``tests/test_event_engine.py``; admission arithmetic agrees up to a
+measure-zero threshold-coincidence caveat — see
+``request_plane.bucket_admissions``); only wall-clock differs.
 """
 from __future__ import annotations
 
@@ -34,10 +48,11 @@ from repro.fl.hierarchy import RoundWindow
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import EdgeState, RouteDecision
 from repro.routing.simulator import RequestLog, RequestProcessor
-from repro.serving.workload import poisson_requests
+from repro.serving.workload import poisson_request_arrays
 from repro.sim.budget import ReconfigBudget
 from repro.sim.events import Event, EventKind, Simulation
 from repro.sim.interference import InterferenceConfig, InterferenceModel
+from repro.sim.request_plane import TIER_DEVICE
 
 # interference-demand source-name prefixes for load that is *external*
 # to the training pipeline — it survives the edge-tier rebuild on a
@@ -61,6 +76,7 @@ class CoSimConfig:
     handover_s: float = 3.0          # device-mobility handover duration
     handover_penalty_ms: float = 15.0  # per-request cost while handing over
     record_trace: bool = True
+    engine: str = "batched"          # "batched" | "heap" (parity)
 
 
 @dataclass
@@ -97,7 +113,11 @@ class CoSim:
         self.proc = RequestProcessor(
             topo, self.rng, latency=cfg.latency, busy_fn=self._busy,
             service_fn=self.interference.service_ms,
-            extra_ms_fn=self._request_penalty)
+            extra_ms_fn=self._request_penalty,
+            engine=cfg.engine,
+            busy_mask_fn=self._busy_mask,
+            stretch_fn=self.interference.stretch_array,
+            extra_ms_vec_fn=self._request_penalty_vec)
         self.proc.bind(self.sim)
 
         self._busy_count = np.zeros(n, dtype=int)
@@ -148,9 +168,13 @@ class CoSim:
         s.on(EventKind.DEVICE_MOVE, self._on_device_move)
         s.on(EventKind.TENANT_LOAD, self._on_tenant_load)
 
-        for ev in poisson_requests(topo.lam * cfg.rate_scale,
-                                   cfg.duration_s, self.rng):
-            s.schedule(ev.t, EventKind.REQUEST_ARRIVAL, node=ev.device)
+        arr_t, arr_dev = poisson_request_arrays(
+            topo.lam * cfg.rate_scale, cfg.duration_s, self.rng)
+        if cfg.engine == "heap":
+            for t, d in zip(arr_t, arr_dev):
+                s.schedule(t, EventKind.REQUEST_ARRIVAL, node=int(d))
+        else:
+            self.proc.add_arrivals(arr_t, arr_dev)
         if schedule is not None:
             self.add_training(schedule)
         if reactive is not None:
@@ -527,6 +551,12 @@ class CoSim:
     def _busy(self, i: int, t: float) -> bool:
         return self._busy_count[i] > 0
 
+    def _busy_mask(self, devices: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`_busy` for the batched request plane (the
+        busy counts change only at control events, so one lookup at
+        flush time covers the whole window)."""
+        return self._busy_count[devices] > 0
+
     def _request_penalty(self, dec: RouteDecision, t: float,
                          device: int) -> float:
         extra = 0.0
@@ -535,6 +565,20 @@ class CoSim:
         # handover churn hits the network path, not on-device serving
         if t < self._handover_until[device] and dec.tier != "device":
             extra += self.cfg.handover_penalty_ms
+        return extra
+
+    def _request_penalty_vec(self, ts: np.ndarray, devices: np.ndarray,
+                             tiers: np.ndarray, edge_ids: np.ndarray,
+                             ) -> np.ndarray:
+        """Vectorized :meth:`_request_penalty`: ``edge_ids >= 0`` marks
+        requests whose route touched an edge (R1 admission or R3
+        forwarding), ``tiers`` uses the request-plane TIER codes."""
+        extra = np.zeros(ts.size)
+        extra[(edge_ids >= 0) & (ts < self.reconfig_until)] += \
+            self.cfg.reconfig_penalty_ms
+        extra[(tiers != TIER_DEVICE)
+              & (ts < self._handover_until[devices])] += \
+            self.cfg.handover_penalty_ms
         return extra
 
     # -- run ----------------------------------------------------------------

@@ -12,6 +12,18 @@ Determinism contract: events at equal timestamps are ordered by
 requests that must observe them), then by insertion order.  Handlers
 run in registration order.  Given the same seed and schedule, two runs
 produce identical event traces — asserted in ``tests/test_cosim.py``.
+
+Window iteration: the heap is the sparse *control plane*.  A dense
+*request plane* (``repro.sim.request_plane``) can register a flush
+hook via :meth:`Simulation.set_flush`; :meth:`Simulation.run` then
+calls it for every half-open window ``[lo, hi)`` between consecutive
+control-event timestamps *before* dispatching the event at ``hi`` —
+so batched request processing observes exactly the state a per-request
+heap run would have seen (same-instant control events still apply
+before same-instant arrivals, which belong to the *next* window), and
+monitors reading the request log at a control event see every earlier
+arrival.  The final window up to ``until`` is flushed inclusively
+after the loop drains.
 """
 from __future__ import annotations
 
@@ -85,6 +97,25 @@ class EventQueue:
 
 Handler = Callable[["Simulation", Event], None]
 
+#: flush hook signature: ``flush(lo, hi, inclusive)`` processes every
+#: pending dense-plane arrival with ``lo <= t < hi`` (``t <= hi`` when
+#: ``inclusive`` — the tail window of a bounded run).
+FlushFn = Callable[[float, float, bool], None]
+
+#: event kinds belonging to the dense request plane — excluded from
+#: control-plane trace fingerprints when comparing the heap ("parity")
+#: engine against the batched engine, which never materializes them.
+REQUEST_PLANE_KINDS = frozenset({EventKind.REQUEST_ARRIVAL.name,
+                                 EventKind.REQUEST_COMPLETION.name})
+
+
+def control_trace(trace: List[Tuple[float, str, int]],
+                  ) -> List[Tuple[float, str, int]]:
+    """The control-plane view of a trace: request arrivals/completions
+    stripped, everything else untouched.  A heap run and a batched run
+    of the same seeded scenario must agree on this view bit-for-bit."""
+    return [row for row in trace if row[1] not in REQUEST_PLANE_KINDS]
+
 
 @dataclass
 class Simulation:
@@ -96,9 +127,17 @@ class Simulation:
     now: float = 0.0
     handlers: Dict[EventKind, List[Handler]] = field(default_factory=dict)
     trace: List[Tuple[float, str, int]] = field(default_factory=list)
+    flush_fn: Optional[FlushFn] = None
+    flushed_to: float = 0.0
 
     def on(self, kind: EventKind, handler: Handler) -> None:
         self.handlers.setdefault(kind, []).append(handler)
+
+    def set_flush(self, fn: Optional[FlushFn]) -> None:
+        """Register the dense request plane's window flush (see module
+        docstring); ``run`` becomes window iteration over the control
+        events."""
+        self.flush_fn = fn
 
     def schedule(self, t: float, kind: EventKind, node: int = -1,
                  payload: Any = None) -> Event:
@@ -106,14 +145,23 @@ class Simulation:
 
     def run(self, until: float = math.inf) -> int:
         """Process events in order until the queue drains or the next
-        event lies beyond ``until`` (which stays queued)."""
+        event lies beyond ``until`` (which stays queued).  With a flush
+        hook registered, the dense plane is advanced through every
+        inter-event window first, and through the tail window up to
+        ``until`` (inclusive) once the control events drain."""
         processed = 0
         while self.queue and self.queue.peek_t() <= until:
             ev = self.queue.pop()
+            if self.flush_fn is not None and ev.t > self.flushed_to:
+                self.flush_fn(self.flushed_to, ev.t, False)
+                self.flushed_to = ev.t
             self.now = ev.t
             if self.record_trace:
                 self.trace.append((round(ev.t, 9), ev.kind.name, ev.node))
             for h in self.handlers.get(ev.kind, ()):
                 h(self, ev)
             processed += 1
+        if self.flush_fn is not None and until >= self.flushed_to:
+            self.flush_fn(self.flushed_to, until, True)
+            self.flushed_to = until
         return processed

@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
+import numpy as np
+
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import RouteDecision
 
@@ -101,6 +103,30 @@ class InterferenceModel:
     def stretch(self, node: NodeKey) -> float:
         """Service-time multiplier from compute time-sharing."""
         return 1.0 / max(1.0 - self.demand(node), self.cfg.floor)
+
+    def stretch_array(self, tier: str, ids: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`stretch` over node ids of one tier — the
+        batched request plane's per-window lookup.  Demand components
+        live in per-node dicts, so the per-*unique*-node stretch is
+        gathered once and broadcast over the (typically much larger)
+        request batch."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.ones(0)
+        u, inv = np.unique(ids, return_inverse=True)
+        vals = np.array([self.stretch((tier, int(k))) for k in u])
+        return vals[inv]
+
+    def service_ms_array(self, tier: str, ids: np.ndarray,
+                         occupancy=0.0) -> np.ndarray:
+        """Vectorized :meth:`service_ms` for one tier: the latency
+        model's (possibly occupancy-dependent) base service stretched
+        by each serving node's current training demand."""
+        ids = np.asarray(ids, dtype=np.int64)
+        occupancy = np.broadcast_to(
+            np.asarray(occupancy, dtype=np.float64), ids.shape)
+        base = self.lat.infer_ms_array(tier, occupancy)
+        return base * self.stretch_array(tier, ids)
 
     def service_ms(self, device: int, dec: RouteDecision,
                    occupancy: int = 0) -> float:

@@ -386,6 +386,9 @@ class ReactiveLoop:
                              f"retraining burst of {p.burst_rounds} rounds"))
 
     def _window_p95(self, t: float) -> Optional[float]:
+        # incremental over the columnar log: each tick binary-searches
+        # the window start from a monotone cursor (O(log n + window)),
+        # so telemetry cost no longer grows with total request history
         return self.cosim.proc.recent_percentile(
             t, self.policy.window_s, 95,
             min_requests=self.policy.min_window_requests)

@@ -36,6 +36,7 @@ from repro.orchestration import Inventory, LearningController
 from repro.orchestration.controller import Deployment
 from repro.sim.budget import ReconfigBudget
 from repro.sim.cosim import CoSim, CoSimConfig
+from repro.sim.events import control_trace
 from repro.sim.reactive import ReactiveLoop, ReactivePolicy
 
 POLICIES = ("static", "reactive", "budgeted")
@@ -75,6 +76,22 @@ class ScenarioResult:
         two runs of the same (scenario, policy, seed) must match."""
         h = hashlib.sha256()
         for t, kind, node in self.trace:
+            h.update(f"{t!r}|{kind}|{node};".encode())
+        h.update(np.ascontiguousarray(self.log.latency_ms).tobytes())
+        for t, a in self.actions:
+            h.update(f"{t!r}|{a};".encode())
+        return h.hexdigest()
+
+    def control_fingerprint(self) -> str:
+        """Digest of the *control-plane* trace (request arrivals /
+        completions stripped) + per-request latencies + reactive
+        actions.  The heap ("parity") engine and the batched engine
+        must agree on this bit-for-bit for the same (scenario, policy,
+        seed) — the batched engine never materializes request events,
+        so the full trace is engine-specific but the control plane is
+        not."""
+        h = hashlib.sha256()
+        for t, kind, node in control_trace(self.trace):
             h.update(f"{t!r}|{kind}|{node};".encode())
         h.update(np.ascontiguousarray(self.log.latency_ms).tobytes())
         for t, a in self.actions:
@@ -235,13 +252,18 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
                  slack: float = 1.35, training: bool = True,
                  p95_threshold_ms: float = 20.0,
                  rx_policy: Optional[ReactivePolicy] = None,
+                 engine: str = "batched",
                  ) -> ScenarioResult:
-    """One (scenario, policy, seed) cell of the grid."""
+    """One (scenario, policy, seed) cell of the grid.  ``engine``
+    picks the request plane ("batched", default) or the per-request
+    heap path ("heap") — the two produce bit-identical results here
+    (``ScenarioResult.control_fingerprint``), heap just pays two heap
+    events per request."""
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
     topo, loc, lam, r = hot_zone_topology(seed=seed, n=n, m=m, hot=hot,
                                           slack=slack)
-    cfg = CoSimConfig(duration_s=duration_s, seed=seed)
+    cfg = CoSimConfig(duration_s=duration_s, seed=seed, engine=engine)
     sched = continual_training(duration_s, l=topo.l) if training else None
 
     reactive, budget, ctl = None, None, None

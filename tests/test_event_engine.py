@@ -1,0 +1,471 @@
+"""Heap-vs-batched request-engine parity + the vectorized request
+plane's building blocks: exact leaky-bucket replay, columnar log,
+incremental telemetry percentiles, window-flush semantics, and the
+bincount-vectorized HFLOP accessors."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import hflop
+from repro.core.topology import ClusterTopology
+from repro.fl import round_schedule
+from repro.orchestration import Inventory, LearningController
+from repro.orchestration.controller import Deployment
+from repro.routing import LatencyModel, SimConfig, simulate
+from repro.routing.rules import EdgeState
+from repro.routing.simulator import RequestProcessor
+from repro.serving.workload import poisson_request_arrays, poisson_requests
+from repro.sim import CoSim, CoSimConfig, EventKind, ReactiveLoop, \
+    ReactivePolicy, Simulation, control_trace
+from repro.sim.request_plane import ColumnarLog, bucket_admissions
+from repro.sim.scenarios import SCENARIOS, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# workload arrays
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrays_match_event_list():
+    lam = np.array([3.0, 0.0, 5.0, 1.5])
+    t, d = poisson_request_arrays(lam, 20.0, seed=11)
+    events = poisson_requests(lam, 20.0, seed=11)
+    assert np.array_equal(t, [e.t for e in events])
+    assert np.array_equal(d, [e.device for e in events])
+    assert np.all(np.diff(t) >= 0)           # time-sorted
+    assert t.size > 100 and np.all(t <= 20.0)
+
+
+# ---------------------------------------------------------------------------
+# exact leaky-bucket replay
+# ---------------------------------------------------------------------------
+
+def _sequential_reference(t, st):
+    """The heap path's per-request admission, verbatim."""
+    out = np.zeros(t.size, dtype=bool)
+    for k, tk in enumerate(t):
+        if st.has_room(priority=True, now=tk):
+            st.admit(tk)
+            out[k] = True
+    return out
+
+
+@pytest.mark.parametrize("cap,rate_mult,seed", [
+    (8.0, 0.5, 0),     # underloaded: single bulk pass
+    (8.0, 2.0, 1),     # overloaded: saturation alternation
+    (8.0, 20.0, 2),    # heavily overloaded: long rejection runs
+    (0.7, 2.0, 3),     # cap < 1 token: nothing ever admitted
+    (0.0, 1.0, 4),     # dead edge
+    (3.0, 1.05, 5),    # near-critically loaded: boundary-dense
+])
+def test_bucket_admissions_bit_exact(cap, rate_mult, seed):
+    rng = np.random.default_rng(seed)
+    rate = cap * rate_mult if cap > 0 else 5.0
+    t = np.cumsum(rng.exponential(1.0 / max(rate, 1e-3), size=4000))
+    a = EdgeState(capacity_rps=cap)
+    b = EdgeState(capacity_rps=cap)
+    got = bucket_admissions(t, a)
+    want = _sequential_reference(t, b)
+    assert np.array_equal(got, want)
+    # token state may carry ~1e-15 cumsum-vs-sequential rounding; the
+    # 1e-6 boundary guard keeps it from ever flipping a decision
+    assert a.tokens == pytest.approx(b.tokens, abs=1e-9)
+    assert a.last_t == b.last_t
+
+
+def test_bucket_admissions_infinite_capacity():
+    st = EdgeState(capacity_rps=np.inf)
+    t = np.linspace(0.1, 5.0, 50)
+    assert bucket_admissions(t, st).all()
+
+
+def test_bucket_starved_edge_keeps_refilling():
+    """Regression: a derated (cap < 1 token) bucket admits nothing,
+    but its tokens must keep refilling toward cap exactly like the
+    heap path — once capacity is restored, admissions resume at the
+    same arrivals in both engines."""
+    t1 = np.cumsum(np.full(20, 0.4)) + 0.1
+    t2 = t1[-1] + np.cumsum(np.full(20, 0.4))
+    a = EdgeState(capacity_rps=0.8)
+    b = EdgeState(capacity_rps=0.8)
+    a.tokens = b.tokens = 0.1          # CAPACITY_CHANGE clamp leftover
+    got1 = bucket_admissions(t1, a)
+    want1 = _sequential_reference(t1, b)
+    assert not got1.any() and not want1.any()
+    assert a.tokens == pytest.approx(b.tokens, abs=1e-9)
+    for st in (a, b):                  # capacity restored mid-run
+        st.capacity_rps = 2.0
+    assert np.array_equal(bucket_admissions(t2, a),
+                          _sequential_reference(t2, b))
+
+
+def test_bucket_admissions_resumes_across_windows():
+    """State carried across flush windows equals one long replay."""
+    rng = np.random.default_rng(7)
+    t = np.cumsum(rng.exponential(0.08, size=3000))
+    whole = EdgeState(capacity_rps=6.0)
+    want = _sequential_reference(t, whole)
+    st = EdgeState(capacity_rps=6.0)
+    got = np.concatenate([bucket_admissions(part, st)
+                          for part in np.array_split(t, 13)])
+    assert np.array_equal(got, want)
+    assert st.tokens == pytest.approx(whole.tokens, abs=1e-9)
+    assert st.last_t == whole.last_t
+
+
+# ---------------------------------------------------------------------------
+# columnar log + incremental telemetry
+# ---------------------------------------------------------------------------
+
+def test_columnar_log_mixed_append_extend():
+    log = ColumnarLog(capacity=4)
+    log.append(0.5, 3, 1, 0, 12.0)
+    log.extend(np.array([1.0, 2.0]), np.array([1, 2]),
+               np.array([0, 2], np.int8), np.array([2, 5], np.int8),
+               np.array([7.0, 90.0]))
+    log.append(3.0, 0, 0, 2, 8.0)
+    assert log.n == 4
+    assert np.array_equal(log.t[:4], [0.5, 1.0, 2.0, 3.0])
+    assert np.array_equal(log.latency_ms[:4], [12.0, 7.0, 90.0, 8.0])
+    assert np.array_equal(log.rule[:4], [0, 2, 5, 2])
+
+
+def test_recent_percentile_matches_naive():
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0, 100, 5000))
+    lat = rng.exponential(10.0, 5000)
+    log = ColumnarLog()
+    log.extend(t, np.zeros(5000, np.int64), np.zeros(5000, np.int8),
+               np.zeros(5000, np.int8), lat)
+    for now in (10.0, 35.0, 35.0, 80.0, 100.0):     # monotone + repeat
+        m = (t >= now - 12.0) & (t <= now)          # the documented window
+        want = float(np.percentile(lat[m], 95))
+        assert log.recent_percentile(now, 12.0, 95) == pytest.approx(want)
+    # moving the window backward resets the cursor instead of lying
+    m = (t >= 20.0 - 12.0) & (t <= 20.0)
+    assert log.recent_percentile(20.0, 12.0, 95) == pytest.approx(
+        float(np.percentile(lat[m], 95)))
+    assert log.recent_percentile(200.0, 1e-6, 95, min_requests=1) is None
+
+
+def test_recent_percentile_tick_cost_independent_of_history():
+    """Satellite regression: telemetry ticks must not rescan the whole
+    request history.  With a 100x longer history and the same window,
+    the per-tick cost stays flat (generous 10x bound; a full rescan
+    would be ~100x)."""
+    def build(n):
+        t = np.linspace(0.0, n / 100.0, n)
+        log = ColumnarLog()
+        log.extend(t, np.zeros(n, np.int64), np.zeros(n, np.int8),
+                   np.zeros(n, np.int8), np.ones(n))
+        return log, float(t[-1])
+
+    def tick_cost(log, now):
+        log.recent_percentile(now, 10.0, 95)     # warm the cursor
+        best = np.inf
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(20):
+                log.recent_percentile(now, 10.0, 95)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    small, now_s = build(20_000)
+    big, now_b = build(2_000_000)
+    assert tick_cost(big, now_b) < 10.0 * tick_cost(small, now_s)
+
+
+# ---------------------------------------------------------------------------
+# window-flush semantics
+# ---------------------------------------------------------------------------
+
+def test_flush_windows_split_at_control_events():
+    """An arrival at exactly a control event's timestamp observes the
+    control change (arrivals order after same-instant control events),
+    and both engines agree on it."""
+    def run(engine):
+        topo = ClusterTopology(assign=np.zeros(1, int), n_devices=1,
+                               n_edges=1, lam=np.ones(1),
+                               r=np.full(1, 100.0), l=2)
+        rng = np.random.default_rng(0)
+        sim = Simulation()
+        proc = RequestProcessor(
+            topo, rng, engine=engine,
+            busy_fn=lambda i, t: True,
+            busy_mask_fn=lambda d, t: np.ones(d.size, bool))
+        proc.bind(sim)
+        t_arr = np.array([1.0, 2.0, 3.0])
+        if engine == "heap":
+            for t in t_arr:
+                sim.schedule(t, EventKind.REQUEST_ARRIVAL, node=0)
+        else:
+            proc.add_arrivals(t_arr, np.zeros(3, np.int64))
+        sim.on(EventKind.NODE_FAILURE,
+               lambda s, e: proc.fail_edge(0))
+        sim.schedule(2.0, EventKind.NODE_FAILURE, node=0)
+        sim.run(until=3.0)
+        return proc.log()
+
+    for engine in ("heap", "batched"):
+        log = run(engine)
+        assert log.rule == ["R1", "R3-overflow", "R3-overflow"], engine
+
+
+def test_run_until_flushes_inclusive_tail():
+    topo = ClusterTopology(assign=np.zeros(2, int), n_devices=2, n_edges=1,
+                           lam=np.ones(2), r=np.full(1, 10.0), l=2)
+    sim = Simulation()
+    proc = RequestProcessor(topo, np.random.default_rng(0),
+                            engine="batched")
+    proc.bind(sim)
+    proc.add_arrivals(np.array([0.5, 2.0, 2.5]),
+                      np.array([0, 1, 0], np.int64))
+    sim.run(until=2.0)                 # no control events at all
+    assert proc.log().t.size == 2      # t <= until flushed, 2.5 pending
+    sim.run(until=3.0)
+    assert proc.log().t.size == 3
+
+
+# ---------------------------------------------------------------------------
+# engine parity: co-simulation (bit-exact)
+# ---------------------------------------------------------------------------
+
+def _hot_zone(seed=0):
+    # the canonical Fig. 7 hot-zone recipe — the exact configuration
+    # the scenario engine and figure benchmarks run
+    from repro.sim.scenarios import hot_zone_topology
+    return hot_zone_topology(seed=seed)
+
+
+def _training(duration):
+    rounds = max(int(duration / 20.0), 1)
+    return round_schedule(rounds=rounds, l=2, local_epochs=5, epoch_s=3.5,
+                          upload_s=2.0, gap_s=2.0)
+
+
+def test_cosim_batched_bit_identical_to_heap():
+    for seed in (0, 3):
+        runs = {}
+        for engine in ("heap", "batched"):
+            topo, *_ = _hot_zone(seed)
+            cfg = CoSimConfig(duration_s=45.0, seed=seed, engine=engine)
+            runs[engine] = CoSim(topo, cfg, schedule=_training(45.0)).run()
+        a, b = runs["heap"], runs["batched"]
+        assert np.array_equal(a.log.t, b.log.t)
+        assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+        assert np.array_equal(a.log.tier, b.log.tier)
+        assert a.log.rule == b.log.rule
+        assert control_trace(a.trace) == control_trace(b.trace)
+        assert a.rounds_completed == b.rounds_completed
+
+
+def test_cosim_reactive_bit_identical_to_heap():
+    """The strong guarantee: with the reactive loop closing the
+    monitor -> recluster cycle, both engines still take identical
+    decisions at identical times."""
+    runs = {}
+    for engine in ("heap", "batched"):
+        topo, loc, lam, r = _hot_zone()
+        cfg = CoSimConfig(duration_s=60.0, seed=0, engine=engine)
+        ctl = LearningController(
+            inventory=Inventory.from_arrays(lam, r, lan_edge=loc), l=2)
+        ctl.deployment = Deployment.from_topology(topo)
+        loop = ReactiveLoop(ctl,
+                            policy=ReactivePolicy(p95_threshold_ms=20.0))
+        runs[engine] = CoSim(topo, cfg, schedule=_training(60.0),
+                             reactive=loop).run()
+    a, b = runs["heap"], runs["batched"]
+    assert a.actions and a.actions == b.actions
+    assert a.reconfig_times == b.reconfig_times
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+    assert control_trace(a.trace) == control_trace(b.trace)
+
+
+@pytest.mark.parametrize("sc_name,policy", [
+    ("straggler", "reactive"), ("mobility", "budgeted"),
+    ("multi_tenant", "reactive"), ("churn", "budgeted")])
+def test_scenario_control_fingerprints_identical(sc_name, policy):
+    rb = run_scenario(SCENARIOS[sc_name](), policy=policy, seed=0,
+                      duration_s=60.0, engine="batched")
+    rh = run_scenario(SCENARIOS[sc_name](), policy=policy, seed=0,
+                      duration_s=60.0, engine="heap")
+    assert rb.control_fingerprint() == rh.control_fingerprint()
+    assert np.array_equal(rb.log.latency_ms, rh.log.latency_ms)
+    assert rb.actions == rh.actions
+
+
+# ---------------------------------------------------------------------------
+# engine parity: inference-only simulate (distributional)
+# ---------------------------------------------------------------------------
+
+def _fig7_logs(cfg):
+    from repro.core import solve_heuristic
+    from repro.routing import compare_methods
+    from repro.sim.scenarios import hot_zone_topology
+    _, loc, lam, r = hot_zone_topology(seed=0)
+    n, m = lam.size, r.size
+    c_d = np.ones((n, m))
+    c_d[np.arange(n), loc] = 0.0
+    inst = hflop.HFLOPInstance(c_d, np.ones(m), lam, r, l=2)
+    sol = solve_heuristic(inst)
+    return compare_methods(inst, {"flat": None, "hier": loc,
+                                  "hflop": sol.assign}, cfg)
+
+
+@pytest.mark.parametrize("rate_scale,speedup", [(1.0, 0.0),  # Fig. 7
+                                                (10.0, 0.5)])  # Fig. 8b
+def test_simulate_parity_fig7_fig8(rate_scale, speedup):
+    """Same-seed heap and batched runs agree on p50/p95 within 1% and
+    on tier fractions exactly (busy draws are interleaved differently,
+    so only the RTT noise differs — routing is identical under
+    continual training)."""
+    lat = LatencyModel(cloud_speedup=speedup)
+    logs = {}
+    for engine in ("heap", "batched"):
+        cfg = SimConfig(duration_s=60.0, seed=0, engine=engine,
+                        rate_scale=rate_scale, latency=lat)
+        logs[engine] = _fig7_logs(cfg)
+    for name in ("flat", "hier", "hflop"):
+        lh, lb = logs["heap"][name], logs["batched"][name]
+        assert np.array_equal(lh.t, lb.t)
+        assert np.array_equal(lh.tier, lb.tier)
+        assert lh.tier_fractions() == lb.tier_fractions()
+        for p in (50, 95):
+            ph = lh.percentile_latency(p)
+            pb = lb.percentile_latency(p)
+            assert abs(ph - pb) <= 0.01 * ph, (name, p)
+
+
+def test_simulate_busy_fraction_parity():
+    """With a fractional busy coin flip the routing itself is random,
+    so parity is distributional: tier fractions within a few percent,
+    percentiles within 5%."""
+    topo = ClusterTopology(assign=np.arange(12) % 3, n_devices=12,
+                           n_edges=3, lam=np.full(12, 4.0),
+                           r=np.full(3, 18.0), l=2)
+    lh = simulate(topo, SimConfig(duration_s=60.0, seed=1,
+                                  busy_fraction=0.5, engine="heap"))
+    lb = simulate(topo, SimConfig(duration_s=60.0, seed=1,
+                                  busy_fraction=0.5, engine="batched"))
+    fh, fb = lh.tier_fractions(), lb.tier_fractions()
+    for tier in ("device", "edge", "cloud"):
+        assert abs(fh[tier] - fb[tier]) < 0.05
+    for p in (50, 95):
+        ph, pb = lh.percentile_latency(p), lb.percentile_latency(p)
+        assert abs(ph - pb) <= 0.05 * max(ph, 1.0)
+
+
+def test_unknown_engine_rejected():
+    topo = ClusterTopology(assign=np.zeros(1, int), n_devices=1,
+                           n_edges=1, lam=np.ones(1), r=np.ones(1), l=2)
+    with pytest.raises(ValueError):
+        simulate(topo, SimConfig(duration_s=1.0, engine="bogus"))
+
+
+def test_batched_engine_rejects_scalar_only_policies():
+    """A scalar-only caller on the batched engine would silently get
+    default routing — it must raise instead."""
+    topo = ClusterTopology(assign=np.zeros(1, int), n_devices=1,
+                           n_edges=1, lam=np.ones(1), r=np.ones(1), l=2)
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="busy_fn"):
+        RequestProcessor(topo, rng, engine="batched",
+                         busy_fn=lambda i, t: True)
+    with pytest.raises(ValueError, match="service_fn"):
+        RequestProcessor(topo, rng, engine="batched",
+                         service_fn=lambda i, d, o: 1.0)
+    # paired policies are fine, as is scalar-only on the heap engine
+    RequestProcessor(topo, rng, engine="batched",
+                     busy_fn=lambda i, t: True,
+                     busy_mask_fn=lambda d, t: np.ones(d.size, bool))
+    RequestProcessor(topo, rng, engine="heap",
+                     busy_fn=lambda i, t: True)
+
+
+def test_calibrated_occupancy_parity():
+    """Occupancy-dependent (calibrated) edge service takes the
+    per-edge sequential fallback in the batched engine — still
+    bit-identical to the heap."""
+    from repro.routing import CalibratedLatencyModel
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": 40.0},
+                                 tier_slots={"edge": 2})
+    logs = {}
+    for engine in ("heap", "batched"):
+        topo, *_ = _hot_zone()
+        cfg = CoSimConfig(duration_s=30.0, seed=0, engine=engine,
+                          latency=lat)
+        logs[engine] = CoSim(topo, cfg, schedule=_training(30.0)).run().log
+    assert np.array_equal(logs["heap"].latency_ms,
+                          logs["batched"].latency_ms)
+    assert logs["heap"].rule == logs["batched"].rule
+
+
+# ---------------------------------------------------------------------------
+# vectorized latency / interference APIs match their scalar twins
+# ---------------------------------------------------------------------------
+
+def test_infer_ms_array_matches_scalar():
+    from repro.routing import CalibratedLatencyModel
+    occ = np.array([0.0, 1.0, 3.0, 7.0])
+    const = LatencyModel(cloud_speedup=0.4)
+    calib = CalibratedLatencyModel(tier_service_ms={"edge": 10.0},
+                                   tier_slots={"edge": 2})
+    for lat in (const, calib):
+        for tier in ("device", "edge", "cloud"):
+            want = [lat.infer_ms(tier, occupancy=o) for o in occ]
+            assert np.allclose(lat.infer_ms_array(tier, occ), want)
+    assert not const.occupancy_dependent("edge")
+    assert calib.occupancy_dependent("edge")
+    assert not calib.occupancy_dependent("cloud")
+
+
+def test_service_ms_array_matches_scalar():
+    from repro.routing.rules import RouteDecision
+    from repro.sim import InterferenceModel
+    m = InterferenceModel()
+    m.set_demand(("edge", 1), "agg", 0.5)
+    m.set_demand(("device", 2), "epoch", 0.4)
+    ids = np.array([0, 1, 1, 3])
+    got = m.service_ms_array("edge", ids)
+    want = [m.service_ms(0, RouteDecision("edge", int(j))) for j in ids]
+    assert np.allclose(got, want)
+    dev = np.array([2, 0, 2])
+    got_d = m.service_ms_array("device", dev)
+    want_d = [m.service_ms(int(i), RouteDecision("device", None))
+              for i in dev]
+    assert np.allclose(got_d, want_d)
+    assert np.allclose(m.stretch_array("edge", ids),
+                       [m.stretch(("edge", int(j))) for j in ids])
+
+
+# ---------------------------------------------------------------------------
+# HFLOP bincount satellites
+# ---------------------------------------------------------------------------
+
+def test_hflop_y_matches_loop_reference():
+    for assign in (np.array([0, 2, 2, -1, 4]), np.array([-1, -1]),
+                   np.zeros(0, int), np.array([1, 1, 1])):
+        sol = hflop.HFLOPSolution(assign=assign, cost=0.0)
+        m = 1 + (int(assign.max()) if assign.size else -1)
+        want = np.asarray([np.any(assign == j) for j in range(m)], bool)
+        assert np.array_equal(sol.y, want)
+
+
+def test_hflop_violations_matches_loop_reference():
+    rng = np.random.default_rng(0)
+    inst = hflop.random_instance(40, 6, seed=1, capacity_slack=0.9)
+    for _ in range(10):
+        assign = rng.integers(-1, inst.m, inst.n)
+        got = hflop.violations(inst, assign)
+        want = []
+        if np.any(assign >= inst.m):
+            want.append("assignment to nonexistent edge")
+        participating = int(np.sum(assign >= 0))
+        if participating < inst.T:
+            want.append(f"participation {participating} < T={inst.T}")
+        for j in range(inst.m):
+            load = float(np.sum(inst.lam[assign == j]))
+            if load > inst.r[j] + 1e-9:
+                want.append(f"edge {j}: load {load:.3f} "
+                            f"> r={inst.r[j]:.3f}")
+        assert got == want
