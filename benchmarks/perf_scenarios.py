@@ -16,8 +16,14 @@ fingerprints match (``det=ok``), and per scenario summarizes how much
 of the unconstrained policy's p95 gain the budget-capped policy
 recovers and what it spent doing so.
 
+Cells of the grid are independent by construction, so ``--jobs N``
+fans them out over a process pool (``repro.sim.scenarios.run_grid``)
+— the full grid drops to wall-clock seconds; output order and every
+reported number are identical to the serial run.
+
   python -m benchmarks.perf_scenarios            # full grid (120 s)
   python -m benchmarks.perf_scenarios --smoke    # fast CI grid (60 s)
+  python -m benchmarks.perf_scenarios --jobs 4   # grid over 4 workers
   python -m benchmarks.perf_scenarios --scenario mobility --budget 15
 """
 from __future__ import annotations
@@ -28,7 +34,7 @@ import sys
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.sim.scenarios import (POLICIES, SCENARIOS, ScenarioResult,
-                                 default_budget_total, run_scenario)
+                                 default_budget_total, run_grid)
 
 from benchmarks.common import emit
 
@@ -38,23 +44,19 @@ DEFAULT_SCENARIOS = ("straggler", "mobility", "multi_tenant", "churn")
 def run(duration_s: float = 120.0, seed: int = 0,
         budget_total: Optional[float] = None,
         scenarios: Sequence[str] = DEFAULT_SCENARIOS,
-        check_determinism: bool = True,
+        check_determinism: bool = True, jobs: int = 1,
         ) -> Dict[Tuple[str, str], ScenarioResult]:
     budget = (budget_total if budget_total is not None
               else default_budget_total())
+    grid = run_grid(scenarios, POLICIES, jobs=jobs,
+                    check_determinism=check_determinism, seed=seed,
+                    duration_s=duration_s, budget_total=budget)
     cells: Dict[Tuple[str, str], ScenarioResult] = {}
     for sc_name in scenarios:
-        scenario = SCENARIOS[sc_name]()
         for policy in POLICIES:
-            res = run_scenario(scenario, policy=policy, seed=seed,
-                               duration_s=duration_s, budget_total=budget)
-            det = ""
-            if check_determinism:
-                rerun = run_scenario(scenario, policy=policy, seed=seed,
-                                     duration_s=duration_s,
-                                     budget_total=budget)
-                det = (";det=ok" if res.fingerprint() == rerun.fingerprint()
-                       else ";det=FAIL")
+            res, det_ok = grid[(sc_name, policy)]
+            det = "" if det_ok is None else (";det=ok" if det_ok
+                                             else ";det=FAIL")
             cells[(sc_name, policy)] = res
             spent = ("" if policy != "budgeted" else
                      f";budget_spent={res.budget_spent:.1f}"
@@ -94,6 +96,9 @@ def main() -> None:
                     help="restrict the grid (repeatable)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI grid (short horizon)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-pool workers for the grid cells "
+                         "(cells are independent; 1 = serial)")
     ap.add_argument("--no-determinism-check", action="store_true")
     args = ap.parse_args()
     duration = 60.0 if args.smoke else args.duration
@@ -102,7 +107,8 @@ def main() -> None:
                 budget_total=args.budget,
                 scenarios=tuple(args.scenario) if args.scenario
                 else DEFAULT_SCENARIOS,
-                check_determinism=not args.no_determinism_check)
+                check_determinism=not args.no_determinism_check,
+                jobs=args.jobs)
     print("\nscenario      policy    p95 ms  rounds  reclusters  "
           "budget", file=sys.stderr)
     for (sc, pol), res in cells.items():

@@ -37,13 +37,16 @@ def main() -> None:
         from benchmarks import perf_cosim_interference
         perf_cosim_interference.run(duration_s=60.0)
         print("# --- scenario suite smoke (stragglers / mobility / "
-              "multi-tenant / budget) ---", file=sys.stderr)
-        from benchmarks import perf_scenarios
-        perf_scenarios.run(duration_s=60.0)
-        print("# --- event-engine throughput smoke (batched vs heap) ---",
+              "multi-tenant / budget), grid over 2 workers ---",
               file=sys.stderr)
+        from benchmarks import perf_scenarios
+        perf_scenarios.run(duration_s=60.0, jobs=2)
+        print("# --- event-engine throughput smoke (batched vs heap, "
+              "constant + calibrated) ---", file=sys.stderr)
         from benchmarks import perf_event_throughput
-        perf_event_throughput.run(duration_s=240.0, parity_duration_s=45.0)
+        perf_event_throughput.run(duration_s=240.0, parity_duration_s=45.0,
+                                  calibrated_duration_s=60.0,
+                                  calibrated_rate_scale=50.0)
         _maybe_write_json(args.json)
         return
 

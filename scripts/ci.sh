@@ -10,30 +10,40 @@ python -m pytest -x -q "$@"
 
 # fast co-sim smoke: exercises the event core, interference model,
 # reactive loop and the batched request engine end-to-end on every CI
-# run (seconds, CSV to stdout, JSON perf record to BENCH_cosim.json)
+# run (seconds, CSV to stdout, JSON perf record to BENCH_cosim.json).
+# The smoke runs the scenario x policy grid over a 2-worker process
+# pool (--jobs 2 path) and measures both the constant and the
+# calibrated (occupancy-coupled) engine.
 python -m benchmarks.run --smoke --json BENCH_cosim.json
 
-# soft events-per-second floor on the batched engine: a regression
-# below the floor prints a loud warning (and shows up in the uploaded
-# BENCH_cosim.json trajectory) but does not fail CI — shared runners
-# are too noisy for a hard perf gate.
+# soft events-per-second floors on the batched engine (constant and
+# calibrated paths): a regression below a floor prints a loud warning
+# (and shows up in the uploaded BENCH_cosim.json trajectory) but does
+# not fail CI — shared runners are too noisy for a hard perf gate.
 python - <<'EOF'
 import json
 
-FLOOR_REQ_PER_S = 300_000.0   # batched engine, Fig. 7 smoke config
+FLOOR_REQ_PER_S = 300_000.0        # batched engine, Fig. 7 smoke config
+FLOOR_CALIBRATED_REQ_PER_S = 800_000.0  # occupancy-coupled fast path,
+#                                    provisioned smoke config (engine-only)
 data = json.load(open("BENCH_cosim.json"))
-row = data.get("event_engine_batched", {})
-rps = row.get("requests_per_s")
-if rps is None:
-    print("WARNING: no batched event-engine throughput in "
-          "BENCH_cosim.json")
-elif rps < FLOOR_REQ_PER_S:
-    print(f"WARNING: batched event engine at {rps:,.0f} simulated "
-          f"req/s — below the soft floor of {FLOOR_REQ_PER_S:,.0f}")
-else:
-    print(f"event engine throughput OK: {rps:,.0f} simulated req/s "
-          f">= soft floor {FLOOR_REQ_PER_S:,.0f}")
+for row_name, floor in (("event_engine_batched", FLOOR_REQ_PER_S),
+                        ("event_engine_batched_calibrated",
+                         FLOOR_CALIBRATED_REQ_PER_S)):
+    rps = data.get(row_name, {}).get("requests_per_s")
+    if rps is None:
+        print(f"WARNING: no {row_name} throughput in BENCH_cosim.json")
+    elif rps < floor:
+        print(f"WARNING: {row_name} at {rps:,.0f} simulated req/s — "
+              f"below the soft floor of {floor:,.0f}")
+    else:
+        print(f"{row_name} OK: {rps:,.0f} simulated req/s >= "
+              f"soft floor {floor:,.0f}")
 speedup = data.get("event_engine_speedup", {}).get("speedup")
 if speedup is not None:
     print(f"batched/heap speedup: {speedup:.1f}x")
+ratio = data.get("event_engine_batched_calibrated", {}).get("vs_constant")
+if ratio is not None:
+    print(f"calibrated path within {ratio:.2f}x of the constant model "
+          f"(target: ~3x)")
 EOF

@@ -17,6 +17,7 @@ Two service-time models share this interface:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, Mapping
 
@@ -54,6 +55,22 @@ class LatencyModel:
         batched request engine takes its fully vectorized path only
         when it does not."""
         return False
+
+    def flat_service_slots(self, tier: str) -> float:
+        """The step boundary of the occupancy-service coupling: while a
+        replica on ``tier`` has strictly fewer than this many requests
+        in service, ``infer_ms`` returns the flat base — the regime the
+        batched engine's closed-form bulk replay
+        (:func:`repro.sim.request_plane.occupancy_replay`) exploits.
+        The constant model is flat everywhere: ``math.inf``."""
+        return math.inf
+
+    def base_service_ms(self, tier: str) -> float:
+        """Service time in the flat (occupancy below
+        :meth:`flat_service_slots`) regime — bit-identical to
+        ``infer_ms(tier, occupancy=o)`` for every such ``o``, which is
+        what lets the bulk replay broadcast one scalar."""
+        return self.infer_ms(tier)
 
     def infer_ms_array(self, tier: str, occupancy: np.ndarray,
                        ) -> np.ndarray:
@@ -111,6 +128,15 @@ class CalibratedLatencyModel(LatencyModel):
 
     def occupancy_dependent(self, tier: str) -> bool:
         return tier in self.tier_service_ms
+
+    def flat_service_slots(self, tier: str) -> float:
+        """Continuous-batching slot count of a measured tier: occupancy
+        below it serves at the flat measured rate, at or above it the
+        ``(occupancy + 1) / slots`` stretch kicks in.  Unmeasured tiers
+        inherit the constant model's ``inf``."""
+        if tier not in self.tier_service_ms:
+            return super().flat_service_slots(tier)
+        return float(max(self.tier_slots.get(tier, 1), 1))
 
     def infer_ms_array(self, tier: str, occupancy: np.ndarray,
                        ) -> np.ndarray:

@@ -32,9 +32,8 @@ generator stream in exactly the heap path's order.
 from __future__ import annotations
 
 import math
-import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -45,20 +44,55 @@ from repro.serving.workload import poisson_request_arrays
 from repro.sim.events import Event, EventKind, Simulation
 from repro.sim.request_plane import (RULE_CODE, RULES, TIER_CLOUD,
                                      TIER_DEVICE, TIER_EDGE, ColumnarLog,
-                                     batched_rtt_draws, bucket_admissions)
+                                     batched_rtt_draws, bucket_admissions,
+                                     occupancy_replay)
 
 ENGINES = ("batched", "heap")
 
 _RULE_NAMES = np.array(RULES, dtype=object)   # code -> str, C-speed take
 
+#: above this many open edges the per-window edge grouping switches
+#: from one boolean scan per edge to a single stable argsort — scans
+#: win decisively at the paper's continuum sizes (a handful of edges),
+#: the sort wins once m x n passes would dominate n log n.
+_EDGE_SCAN_MAX = 16
 
-@dataclass
+
 class RequestLog:
-    t: np.ndarray                    # arrival times (s)
-    device: np.ndarray
-    tier: np.ndarray                 # 0=device 1=edge 2=cloud
-    rule: List[str]
-    latency_ms: np.ndarray
+    """Columnar view of one run's served requests.  Rule names are kept
+    as int8 codes (``rule_code``) and materialized to strings lazily on
+    first access of ``rule`` — at 10^7 requests the eager
+    list-of-strings was the single largest cost of ``log()``."""
+
+    def __init__(self, t: np.ndarray, device: np.ndarray,
+                 tier: np.ndarray,
+                 rule: Optional[Sequence[str]] = None,
+                 latency_ms: Optional[np.ndarray] = None, *,
+                 rule_code: Optional[np.ndarray] = None):
+        self.t = t
+        self.device = device
+        self.tier = tier
+        self.latency_ms = (latency_ms if latency_ms is not None
+                           else np.zeros(0))
+        if rule_code is not None:
+            self._rule_code = np.asarray(rule_code, dtype=np.int8)
+        else:                        # legacy constructor: string names
+            self._rule_code = np.asarray(
+                [RULE_CODE[r] for r in (rule if rule is not None else ())],
+                dtype=np.int8)
+        self._rule_names: Optional[List[str]] = None
+
+    @property
+    def rule_code(self) -> np.ndarray:
+        """Per-request routing-rule codes (int8, see ``RULES``)."""
+        return self._rule_code
+
+    @property
+    def rule(self) -> List[str]:
+        """Per-request rule names, materialized (and cached) on demand."""
+        if self._rule_names is None:
+            self._rule_names = _RULE_NAMES[self._rule_code].tolist()
+        return self._rule_names
 
     def mean_latency(self) -> float:
         """Mean end-to-end latency in ms (NaN on an empty log)."""
@@ -84,6 +118,30 @@ class RequestLog:
         return {f"p{p:g}": self.percentile_latency(p)
                 for p in (50, 95, 99)}
 
+    def percentile_ci(self, p: float, confidence: float = 0.95,
+                      n_boot: int = 400, seed: int = 0,
+                      ) -> tuple:
+        """Bootstrap confidence interval of the p-th latency percentile
+        — ``(lo, hi)`` in ms, NaN on an empty log.
+
+        Per-request latencies are exact in the columnar log, so the
+        bootstrap is the order-statistic shortcut: the p-th percentile
+        of one resample of size n is (to interpolation) the K-th order
+        statistic of the *original* sorted sample with
+        ``K ~ Binomial(n, p/100)`` — B resamples cost one sort plus B
+        binomial draws, never B x n copies, which is what makes CIs on
+        10^7-request high-rate sweeps free."""
+        n = self.latency_ms.size
+        if n == 0:
+            return (math.nan, math.nan)
+        s = np.sort(self.latency_ms)
+        rng = np.random.default_rng(seed)
+        k = rng.binomial(n, p / 100.0, size=int(n_boot))
+        boots = s[np.clip(k, 0, n - 1)]
+        alpha = (1.0 - confidence) / 2.0
+        return (float(np.percentile(boots, 100.0 * alpha)),
+                float(np.percentile(boots, 100.0 * (1.0 - alpha))))
+
     def tier_fractions(self) -> Dict[str, float]:
         names = {0: "device", 1: "edge", 2: "cloud"}
         if self.tier.size == 0:
@@ -101,19 +159,36 @@ class RequestLog:
         so the timeline keeps a uniform grid and gaps stay visible.
 
         Arrival times are nondecreasing (the engines log in arrival
-        order), so each window is a ``searchsorted`` slice instead of a
-        full-log boolean scan."""
+        order), so windows are contiguous ``searchsorted`` slices, and
+        the per-window percentile is one grouped sort: ``lexsort`` on
+        (window id, latency) orders every slice at once, then the
+        linearly interpolated percentile is gathered per window with
+        array arithmetic — no Python loop over windows."""
         if self.t.size == 0:
             return np.zeros((0, 2))
         edges = np.arange(0.0, float(self.t[-1]) + 1e-9, window_s)
         bounds = np.searchsorted(self.t, np.append(edges,
                                                    edges[-1] + window_s))
-        rows = []
-        for k, lo in enumerate(edges):
-            sl = self.latency_ms[bounds[k]:bounds[k + 1]]
-            rows.append((lo, float(np.percentile(sl, p)) if sl.size
-                         else math.nan))
-        return np.asarray(rows)
+        counts = np.diff(bounds)
+        nw = edges.size
+        win_id = np.repeat(np.arange(nw), counts)
+        lat = self.latency_ms[bounds[0]:bounds[-1]]
+        s = lat[np.lexsort((lat, win_id))]   # each window's slice sorted
+        out = np.full((nw, 2), math.nan)
+        out[:, 0] = edges
+        nz = counts > 0
+        if nz.any():
+            # numpy's default linear interpolation, vectorized across
+            # windows: virtual index (count-1) * p/100 into the sorted
+            # slice, then lerp between its two neighbours
+            pos = (counts[nz] - 1) * (p / 100.0)
+            lo_i = np.floor(pos).astype(np.int64)
+            hi_i = np.minimum(lo_i + 1, counts[nz] - 1)
+            frac = pos - lo_i
+            base = (bounds[:-1] - bounds[0])[nz]
+            s_lo = s[base + lo_i]
+            out[nz, 1] = s_lo + frac * (s[base + hi_i] - s_lo)
+        return out
 
 
 @dataclass
@@ -205,7 +280,7 @@ class RequestProcessor:
         self._arr_pos = 0
         self._flush_started = False
         self._occ_edge = self.lat.occupancy_dependent("edge")
-        self._pending: Dict[int, List[float]] = {}
+        self._pending: Dict[int, np.ndarray] = {}
         self.edges: Dict[int, EdgeState] = {}
         self.set_topology(topo)
 
@@ -343,16 +418,7 @@ class RequestProcessor:
         eb = busy & (j >= 0)                            # R1 via aggregator
         if eb.any():
             base_edge = self.lat.infer_ms("edge")
-            # group window positions by edge in one stable sort (keeps
-            # arrival order within each edge) instead of rescanning the
-            # window once per open edge
-            eb_idx = np.nonzero(eb)[0]
-            order = np.argsort(j[eb_idx], kind="stable")
-            eb_sorted = eb_idx[order]
-            je_sorted = j[eb_sorted]
-            cuts = np.nonzero(np.diff(je_sorted))[0] + 1
-            for m in np.split(eb_sorted, cuts):
-                je = int(j[m[0]])
+            for je, m in self._edge_groups(eb, j):
                 st = self.edges[je]
                 adm = bucket_admissions(t[m], st)
                 a_idx, o_idx = m[adm], m[~adm]
@@ -379,23 +445,59 @@ class RequestProcessor:
             net = net + self.extra_ms_vec_fn(t, dev, tier, edge_id)
         self._cols.extend(t, dev, tier, rule, net + service)
 
+    def _edge_groups(self, eb: np.ndarray, j: np.ndarray):
+        """Window positions grouped by edge (arrival order within each
+        group), ascending edge id.  A handful of open edges — the
+        continuum sizes the paper sweeps — is grouped with one boolean
+        scan per edge; larger edge counts fall back to a single stable
+        argsort + split so cost stays O(n log n), not O(m n)."""
+        if len(self.edges) <= _EDGE_SCAN_MAX:
+            covered = 0
+            for je in sorted(self.edges):
+                m = np.flatnonzero(eb & (j == je))
+                covered += m.size
+                if m.size:
+                    yield je, m
+            if covered != int(np.count_nonzero(eb)):
+                # an assigned edge with no admission state would slip
+                # through the scans silently (the argsort path below
+                # raises KeyError at self.edges[je]) — fail as loudly
+                missing = np.setdiff1d(j[eb], list(self.edges))
+                raise KeyError(f"requests routed to edges {missing} "
+                               f"with no admission state (open edges: "
+                               f"{sorted(self.edges)})")
+            return
+        eb_idx = np.nonzero(eb)[0]
+        order = np.argsort(j[eb_idx], kind="stable")
+        eb_sorted = eb_idx[order]
+        je_sorted = j[eb_sorted]
+        cuts = np.nonzero(np.diff(je_sorted))[0] + 1
+        for m in np.split(eb_sorted, cuts):
+            yield int(j[m[0]]), m
+
     def _serve_occupancy(self, je: int, t: np.ndarray, a_idx: np.ndarray,
                          service: np.ndarray, stretch_e: float) -> None:
         """Occupancy-dependent (calibrated) edge service: replay the
-        per-edge c-server occupancy exactly — each admitted request
-        sees the completions of its predecessors, so service and
-        occupancy are coupled and the update is sequential per edge
-        (cross-edge and all other work stays vectorized)."""
-        pend = self._pending.setdefault(je, [])
+        per-edge occupancy process exactly through
+        :func:`~repro.sim.request_plane.occupancy_replay` — stretches
+        below the replica's slot count collapse to a closed-form bulk
+        run, only genuinely oversubscribed stretches (where service and
+        occupancy couple) replay with the scalar arithmetic.  Cost
+        scales with time-at-oversubscription, not admitted load, and
+        results are bit-identical to the per-request heap engine."""
         st = self.edges[je]
-        for k in a_idx:
-            tk = t[k]
-            while pend and pend[0] <= tk:
-                heapq.heappop(pend)
-            s_k = self.lat.infer_ms("edge", occupancy=len(pend)) * stretch_e
-            service[k] = s_k
-            heapq.heappush(pend, tk + s_k / 1000.0)
-        st.in_service = len(pend)
+        pend = self._pending.get(je)
+        if pend is None:
+            pend = np.zeros(0, dtype=np.float64)
+        svc, pend = occupancy_replay(
+            t[a_idx], pend,
+            base_ms=self.lat.base_service_ms("edge") * stretch_e,
+            slots=self.lat.flat_service_slots("edge"),
+            service_ms_fn=lambda occ: (
+                self.lat.infer_ms("edge", occupancy=occ) * stretch_e))
+        service[a_idx] = svc
+        self._pending[je] = pend
+        st.in_service = int(pend.size)
 
     # -- shared telemetry / log ---------------------------------------------
 
@@ -417,13 +519,15 @@ class RequestProcessor:
                                             min_requests=min_requests)
 
     def log(self) -> RequestLog:
+        """Snapshot of the columnar log — O(n) array copies only; rule
+        strings stay int8 codes until someone reads ``.rule``."""
         c = self._cols
         n = c.n
         return RequestLog(
             t=c.t[:n].copy(), device=c.device[:n].copy(),
             tier=c.tier[:n].astype(np.int64),
-            rule=_RULE_NAMES[c.rule[:n]].tolist(),
-            latency_ms=c.latency_ms[:n].copy())
+            latency_ms=c.latency_ms[:n].copy(),
+            rule_code=c.rule[:n].copy())
 
 
 def simulate(topo: ClusterTopology, cfg: SimConfig) -> RequestLog:

@@ -7,8 +7,8 @@ close that cycle.
 """
 import importlib
 
-from repro.sim.events import (Event, EventKind, EventQueue, Simulation,
-                              control_trace)
+from repro.sim.events import (EVENT_EFFECTS, Event, EventEffect, EventKind,
+                              EventQueue, Simulation, control_trace)
 
 _LAZY = {
     "CoSim": "repro.sim.cosim",
@@ -16,6 +16,7 @@ _LAZY = {
     "CoSimResult": "repro.sim.cosim",
     "ColumnarLog": "repro.sim.request_plane",
     "bucket_admissions": "repro.sim.request_plane",
+    "occupancy_replay": "repro.sim.request_plane",
     "InterferenceConfig": "repro.sim.interference",
     "InterferenceModel": "repro.sim.interference",
     "AccuracyModel": "repro.sim.reactive",
@@ -27,10 +28,11 @@ _LAZY = {
     "Scenario": "repro.sim.scenarios",
     "ScenarioResult": "repro.sim.scenarios",
     "run_scenario": "repro.sim.scenarios",
+    "run_grid": "repro.sim.scenarios",
 }
 
-__all__ = ["Event", "EventKind", "EventQueue", "Simulation",
-           "control_trace"] + list(_LAZY)
+__all__ = ["EVENT_EFFECTS", "Event", "EventEffect", "EventKind",
+           "EventQueue", "Simulation", "control_trace"] + list(_LAZY)
 
 
 def __getattr__(name):

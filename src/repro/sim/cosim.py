@@ -77,6 +77,10 @@ class CoSimConfig:
     handover_penalty_ms: float = 15.0  # per-request cost while handing over
     record_trace: bool = True
     engine: str = "batched"          # "batched" | "heap" (parity)
+    fuse_windows: bool = True        # fuse request-plane windows across
+    #                                  effect-free control events (trace-
+    #                                  equivalent; False = flush at every
+    #                                  control event, the pre-fusion path)
 
 
 @dataclass
@@ -103,7 +107,9 @@ class CoSim:
                  schedule: Optional[Sequence[RoundWindow]] = None,
                  reactive=None, budget: Optional[ReconfigBudget] = None):
         self.cfg = cfg
-        self.sim = Simulation(record_trace=cfg.record_trace)
+        self.sim = Simulation(record_trace=cfg.record_trace,
+                              fuse_windows=cfg.fuse_windows)
+        self.sim.flush_gate = self._flush_gate
         self.rng = np.random.default_rng(cfg.seed)
         n = topo.n_devices
         # per-device epoch-time multiplier in [1-spread, 1]: every device
@@ -543,6 +549,26 @@ class CoSim:
             self.interference.clear_tier("edge", "migration")
 
     # -- pluggable policies for the request processor -----------------------
+
+    def _flush_gate(self, ev: Event) -> Optional[bool]:
+        """Dynamic refinement of the static window-fusion table
+        (``events.EVENT_EFFECTS``): an epoch boundary only mutates
+        routing inputs when it actually flips the device's busy flag.
+        A cancelled (straggler-re-timed / deadline-dropped) epoch's
+        events are no-ops outright; an ``EPOCH_START`` on an
+        already-busy device, or an ``EPOCH_END`` that leaves other
+        epochs in flight (overlapping training bursts), changes neither
+        the busy mask nor the device's ``epoch`` interference demand —
+        those windows fuse.  Decided strictly from state the handlers
+        have not yet touched."""
+        k = ev.kind
+        if k is EventKind.EPOCH_START or k is EventKind.EPOCH_END:
+            tok = ev.payload[2]
+            if tok in self._cancelled:
+                return False
+            busy = self._busy_count[ev.node]
+            return busy == 0 if k is EventKind.EPOCH_START else busy <= 1
+        return None
 
     @property
     def training_active(self) -> bool:

@@ -24,6 +24,21 @@ before same-instant arrivals, which belong to the *next* window), and
 monitors reading the request log at a control event see every earlier
 arrival.  The final window up to ``until`` is flushed inclusively
 after the loop drains.
+
+Window fusion: not every control event warrants cutting a window.
+Each :class:`EventKind` is classified by its effect on the request
+plane (:data:`EVENT_EFFECTS`): *mutates-routing-inputs* (busy flags,
+capacities, assignment, interference stretch, penalty windows, the
+shared generator stream), *reads-request-log* (telemetry monitors), or
+*neither*.  A window ending in an effect-free event is **fused** with
+the next one — the flush is skipped and the pending arrivals ride
+along until a flushing event (or the run tail) cuts them, which is
+trace-equivalent by construction: the skipped event's handlers neither
+change what routing would observe nor observe what routing produced.
+A host (the co-sim) can refine the static table per event through
+:attr:`Simulation.flush_gate` — e.g. an ``EPOCH_START`` on a device
+that is *already* busy changes nothing the router can see — and
+``fuse_windows=False`` restores a flush at every control event.
 """
 from __future__ import annotations
 
@@ -95,7 +110,49 @@ class EventQueue:
         return bool(self._heap)
 
 
+class EventEffect(IntEnum):
+    """What dispatching one control event can do to the request plane —
+    the window-fusion classification (see module docstring)."""
+    NONE = 0                 # neither mutates routing inputs nor reads log
+    MUTATES_ROUTING = 1      # busy flags / capacity / assign / stretch / rng
+    READS_LOG = 2            # handler observes the request log (telemetry)
+
+
+#: Static per-kind classification of the *co-sim's* handler contract.
+#: ``STRAGGLER`` re-times future epochs (and the reactive drop policy
+#: cancels future ones), ``DRIFT_ONSET`` only moves the accuracy model,
+#: ``ROUND_START`` only schedules epoch/aggregation events — none of
+#: them changes anything an in-flight request window can observe.
+#: Everything else defaults to mutating; a custom handler that mutates
+#: routing inputs on a ``NONE`` kind must set ``fuse_windows=False`` or
+#: install a stricter ``flush_gate``.
+EVENT_EFFECTS: Dict[EventKind, EventEffect] = {
+    EventKind.REQUEST_COMPLETION: EventEffect.MUTATES_ROUTING,
+    EventKind.NODE_FAILURE: EventEffect.MUTATES_ROUTING,
+    EventKind.CAPACITY_CHANGE: EventEffect.MUTATES_ROUTING,
+    EventKind.DEVICE_MOVE: EventEffect.MUTATES_ROUTING,
+    EventKind.STRAGGLER: EventEffect.NONE,
+    EventKind.TENANT_LOAD: EventEffect.MUTATES_ROUTING,
+    EventKind.DRIFT_ONSET: EventEffect.NONE,
+    EventKind.RECONFIG_END: EventEffect.MUTATES_ROUTING,
+    EventKind.ROUND_START: EventEffect.NONE,
+    EventKind.EPOCH_END: EventEffect.MUTATES_ROUTING,
+    EventKind.EPOCH_START: EventEffect.MUTATES_ROUTING,
+    EventKind.AGG_START: EventEffect.MUTATES_ROUTING,
+    EventKind.AGG_END: EventEffect.MUTATES_ROUTING,
+    EventKind.ROUND_END: EventEffect.MUTATES_ROUTING,
+    EventKind.TELEMETRY: EventEffect.READS_LOG,
+    EventKind.REQUEST_ARRIVAL: EventEffect.MUTATES_ROUTING,
+}
+
+
 Handler = Callable[["Simulation", Event], None]
+
+#: optional per-event refinement of :data:`EVENT_EFFECTS` — returns
+#: True (flush), False (fuse), or None (use the static table).  Must
+#: be decided *before* the event's handlers run, from state they have
+#: not yet touched.
+FlushGate = Callable[[Event], Optional[bool]]
 
 #: flush hook signature: ``flush(lo, hi, inclusive)`` processes every
 #: pending dense-plane arrival with ``lo <= t < hi`` (``t <= hi`` when
@@ -129,6 +186,9 @@ class Simulation:
     trace: List[Tuple[float, str, int]] = field(default_factory=list)
     flush_fn: Optional[FlushFn] = None
     flushed_to: float = 0.0
+    fuse_windows: bool = True        # skip flushes at effect-free events
+    flush_gate: Optional[FlushGate] = None
+    fused_windows: int = 0           # observability: flushes skipped
 
     def on(self, kind: EventKind, handler: Handler) -> None:
         self.handlers.setdefault(kind, []).append(handler)
@@ -143,18 +203,35 @@ class Simulation:
                  payload: Any = None) -> Event:
         return self.queue.push(t, kind, node=node, payload=payload)
 
+    def _needs_flush(self, ev: Event) -> bool:
+        """Whether the window ending at ``ev`` must flush before the
+        event's handlers run — the fusion decision (module docstring)."""
+        if not self.fuse_windows:
+            return True
+        if self.flush_gate is not None:
+            verdict = self.flush_gate(ev)
+            if verdict is not None:
+                return verdict
+        return EVENT_EFFECTS.get(
+            ev.kind, EventEffect.MUTATES_ROUTING) is not EventEffect.NONE
+
     def run(self, until: float = math.inf) -> int:
         """Process events in order until the queue drains or the next
         event lies beyond ``until`` (which stays queued).  With a flush
         hook registered, the dense plane is advanced through every
-        inter-event window first, and through the tail window up to
-        ``until`` (inclusive) once the control events drain."""
+        inter-event window first — except windows ending in an
+        effect-free event, which fuse into the next one — and through
+        the tail window up to ``until`` (inclusive) once the control
+        events drain."""
         processed = 0
         while self.queue and self.queue.peek_t() <= until:
             ev = self.queue.pop()
             if self.flush_fn is not None and ev.t > self.flushed_to:
-                self.flush_fn(self.flushed_to, ev.t, False)
-                self.flushed_to = ev.t
+                if self._needs_flush(ev):
+                    self.flush_fn(self.flushed_to, ev.t, False)
+                    self.flushed_to = ev.t
+                else:
+                    self.fused_windows += 1
             self.now = ev.t
             if self.record_trace:
                 self.trace.append((round(ev.t, 9), ev.kind.name, ev.node))

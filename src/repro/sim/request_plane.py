@@ -18,9 +18,15 @@ arithmetic:
     found by ``searchsorted``, so cost never scales with the offered
     (rejected) load;
   * service times are per-(tier, node) constants — interference
-    stretch times the latency model's base — broadcast over the batch
-    (occupancy-sensitive calibrated models take a per-edge scalar
-    fallback loop, see ``RequestProcessor``);
+    stretch times the latency model's base — broadcast over the batch;
+    occupancy-sensitive calibrated models go through
+    :func:`occupancy_replay`, which collapses every stretch of
+    occupancy below the replica's slot count to the same closed-form
+    broadcast (completion times are arrival + a constant, so occupancy
+    is two ``searchsorted`` counts) and replays only genuinely
+    oversubscribed stretches — where service and occupancy couple —
+    with the exact scalar arithmetic, so cost scales with
+    time-at-oversubscription, not offered load;
   * network RTTs are drawn in bulk from the same generator stream the
     heap path would have consumed request-by-request, so a batched
     co-simulation run is *bit-identical* to the heap ("parity") run.
@@ -33,7 +39,8 @@ rescanning the whole request history.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import heapq
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -258,6 +265,99 @@ def bucket_admissions(t: np.ndarray, st: EdgeState) -> np.ndarray:
     return admitted
 
 
+def _merge_pending(p: np.ndarray, c: np.ndarray, t_last: float,
+                   ) -> np.ndarray:
+    """In-flight completions surviving past the last processed arrival:
+    the ``<= t_last`` prefix of either sorted array is exactly what the
+    scalar replay's pops would have drained by then."""
+    keep_p = p[np.searchsorted(p, t_last, side="right"):]
+    keep_c = c[np.searchsorted(c, t_last, side="right"):]
+    if keep_p.size == 0:
+        return np.array(keep_c, dtype=np.float64)
+    if keep_c.size == 0:
+        return np.array(keep_p, dtype=np.float64)
+    return np.sort(np.concatenate([keep_p, keep_c]))
+
+
+def occupancy_replay(t: np.ndarray, pending: np.ndarray, base_ms: float,
+                     slots: float,
+                     service_ms_fn: Callable[[int], float],
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact vectorized replay of occupancy-coupled service on one
+    edge's admitted arrivals ``t`` (sorted).  ``pending`` is the sorted
+    array of in-flight completion times carried over from the previous
+    window; ``base_ms`` the flat service (base x interference stretch)
+    below ``slots`` occupancy (``LatencyModel.flat_service_slots``);
+    ``service_ms_fn(occ)`` the exact scalar service at occupancy
+    ``occ`` (used only while oversubscribed).  Returns the per-arrival
+    service array and the new pending state.
+
+    Mirrors the :func:`bucket_admissions` design — two regimes,
+    switched adaptively over geometrically growing chunks:
+
+      * **bulk (occupancy at most ``slots - 1``)** — every service is
+        the same ``base_ms``, so completion times are
+        ``t + base_ms/1000`` (the *identical* float add the scalar
+        path performs) and the occupancy each arrival observes is two
+        ``searchsorted`` counts: carried-over completions still in
+        flight plus same-run predecessors not yet done.  The first
+        arrival whose hypothesized occupancy reaches ``slots`` — where
+        service departs from the base and the recursion genuinely
+        couples — cuts the run; everything before it is exact;
+      * **oversubscribed** — replayed with the verbatim scalar
+        heap arithmetic (pop completions ``<= t_k``, serve at
+        ``service_ms_fn(len(pending))``, push ``t_k + s_k/1000``)
+        until occupancy falls back below ``slots``, then back to bulk.
+
+    Bit-identical to the all-scalar replay by construction: the bulk
+    regime performs the same float operations on the same operands, and
+    the cut point is decided from exactly reconstructed occupancies."""
+    n = t.size
+    service = np.empty(n, dtype=np.float64)
+    p = np.asarray(pending, dtype=np.float64)
+    base_s = base_ms / 1000.0
+    rel = np.arange(n, dtype=np.int64)       # chunk index template
+    a, chunk = 0, _CHUNK0
+    while a < n:
+        # -- bulk: hypothesize flat service over the next chunk
+        b = min(a + chunk, n)
+        tc = t[a:b]
+        c = tc + base_s                      # completion times if flat
+        # same-run predecessors still in flight ...
+        occ = rel[:b - a] - np.searchsorted(c, tc, side="right")
+        np.maximum(occ, 0, out=occ)
+        if p.size:                           # ... plus carried-over ones
+            occ += p.size - np.searchsorted(p, tc, side="right")
+        over = occ >= slots                  # service departs from base
+        v = int(np.argmax(over)) if over.any() else -1
+        if v < 0:                            # whole chunk stays flat
+            service[a:b] = base_ms
+            p = _merge_pending(p, c, float(tc[-1]))
+            a = b
+            chunk = min(chunk * 4, _CHUNK_MAX)
+            continue
+        service[a:a + v] = base_ms           # exact flat prefix ...
+        if v > 0:
+            p = _merge_pending(p, c[:v], float(tc[v - 1]))
+        # ... then scalar replay while oversubscribed (a sorted array
+        # is already a valid min-heap)
+        heap = p.tolist()
+        k = a + v
+        while k < n:
+            tk = t[k]
+            while heap and heap[0] <= tk:
+                heapq.heappop(heap)
+            if len(heap) < slots:            # recovered: back to bulk
+                break
+            s_k = service_ms_fn(len(heap))
+            service[k] = s_k
+            heapq.heappush(heap, tk + s_k / 1000.0)
+            k += 1
+        p = np.sort(np.asarray(heap, dtype=np.float64))
+        a, chunk = k, _CHUNK0
+    return service, p
+
+
 def batched_rtt_draws(rng: np.random.Generator, lat,
                       first_tier: np.ndarray,
                       two_hop: np.ndarray) -> np.ndarray:
@@ -274,21 +374,29 @@ def batched_rtt_draws(rng: np.random.Generator, lat,
     n = first_tier.size
     if n == 0:
         return np.zeros(0)
+    # per-tier (lo, width) gathered through one small LUT indexed by the
+    # int8 tier code — one fancy-index pass instead of three masked
+    # writes over the window
+    lut = np.zeros((3, 2))
+    for code, (rlo, rhi) in ((TIER_DEVICE, lat.device_rtt_ms),
+                             (TIER_EDGE, lat.edge_rtt_ms),
+                             (TIER_CLOUD, lat.cloud_rtt_ms)):
+        lut[code, 0] = rlo
+        lut[code, 1] = rhi - rlo
+    bounds = lut[first_tier]
+    any_two_hop = bool(two_hop.any())
+    if not any_two_hop:
+        # common case (no overflow forwarding in the window): one draw
+        # per request, stream positions are just 0..n-1 — skip the
+        # cumsum offset bookkeeping entirely
+        raw = rng.random(n)
+        return bounds[:, 0] + raw * bounds[:, 1]
     ndraw = 1 + two_hop.astype(np.int64)
     off = np.zeros(n, dtype=np.int64)
     np.cumsum(ndraw[:-1], out=off[1:])
     raw = rng.random(int(off[-1] + ndraw[-1]))
-    lo = np.empty(n)
-    width = np.empty(n)
-    for code, (rlo, rhi) in ((TIER_DEVICE, lat.device_rtt_ms),
-                             (TIER_EDGE, lat.edge_rtt_ms),
-                             (TIER_CLOUD, lat.cloud_rtt_ms)):
-        m = first_tier == code
-        lo[m] = rlo
-        width[m] = rhi - rlo
-    net = lo + raw[off] * width
-    if two_hop.any():
-        e_lo, e_hi = lat.edge_rtt_ms
-        second = raw[off[two_hop] + 1]
-        net[two_hop] += e_lo + second * (e_hi - e_lo)
+    net = bounds[:, 0] + raw[off] * bounds[:, 1]
+    e_lo, e_hi = lat.edge_rtt_ms
+    second = raw[off[two_hop] + 1]
+    net[two_hop] += e_lo + second * (e_hi - e_lo)
     return net

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.topology import ClusterTopology
+from repro.routing.latency import LatencyModel
 from repro.routing.simulator import RequestLog
 from repro.fl.hierarchy import round_schedule
 from repro.orchestration import Inventory, LearningController
@@ -253,17 +254,24 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
                  p95_threshold_ms: float = 20.0,
                  rx_policy: Optional[ReactivePolicy] = None,
                  engine: str = "batched",
+                 latency: Optional[LatencyModel] = None,
+                 fuse_windows: bool = True,
                  ) -> ScenarioResult:
     """One (scenario, policy, seed) cell of the grid.  ``engine``
     picks the request plane ("batched", default) or the per-request
     heap path ("heap") — the two produce bit-identical results here
     (``ScenarioResult.control_fingerprint``), heap just pays two heap
-    events per request."""
+    events per request.  ``fuse_windows=False`` flushes the request
+    plane at every control event (the pre-fusion behavior, same
+    results); ``latency`` overrides the latency model (e.g. a
+    ``CalibratedLatencyModel`` for occupancy-coupled serving)."""
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
     topo, loc, lam, r = hot_zone_topology(seed=seed, n=n, m=m, hot=hot,
                                           slack=slack)
-    cfg = CoSimConfig(duration_s=duration_s, seed=seed, engine=engine)
+    cfg_kwargs = {} if latency is None else {"latency": latency}
+    cfg = CoSimConfig(duration_s=duration_s, seed=seed, engine=engine,
+                      fuse_windows=fuse_windows, **cfg_kwargs)
     sched = continual_training(duration_s, l=topo.l) if training else None
 
     reactive, budget, ctl = None, None, None
@@ -297,3 +305,47 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
         budget_vetoes=budget.vetoes if budget is not None else 0,
         drops=len(res.drop_log), moves=len(res.move_log),
         actions=res.actions, trace=res.trace, log=log)
+
+
+# ---------------------------------------------------------------------------
+# parallel grid runner
+# ---------------------------------------------------------------------------
+
+def _grid_cell(item: Tuple[str, str, Dict, bool],
+               ) -> Tuple[str, str, ScenarioResult, Optional[bool]]:
+    """One picklable grid cell: scenarios are rebuilt by *name* inside
+    the worker (their ``inject`` closures don't pickle), run, and
+    optionally re-run for the determinism fingerprint check."""
+    sc_name, policy, kwargs, check = item
+    res = run_scenario(SCENARIOS[sc_name](), policy=policy, **kwargs)
+    det: Optional[bool] = None
+    if check:
+        rerun = run_scenario(SCENARIOS[sc_name](), policy=policy, **kwargs)
+        det = res.fingerprint() == rerun.fingerprint()
+    return sc_name, policy, res, det
+
+
+def run_grid(scenario_names: Sequence[str],
+             policies: Sequence[str] = POLICIES, *,
+             jobs: int = 1, check_determinism: bool = False,
+             **kwargs) -> Dict[Tuple[str, str],
+                               Tuple[ScenarioResult, Optional[bool]]]:
+    """The scenario x policy grid, optionally over a process pool.
+
+    Cells are independent by construction (every run seeds its own
+    generators from the cell's seed), so ``jobs > 1`` fans them out
+    with ``ProcessPoolExecutor`` — results come back in deterministic
+    (scenario, policy) order either way, and ``check_determinism=True``
+    re-runs each cell *inside its worker* and compares event-trace
+    fingerprints.  Extra ``kwargs`` go to :func:`run_scenario`
+    verbatim.  Returns ``{(scenario, policy): (result, det_ok)}`` with
+    ``det_ok`` None when the check is off."""
+    items = [(sc, pol, kwargs, check_determinism)
+             for sc in scenario_names for pol in policies]
+    if jobs <= 1 or len(items) <= 1:
+        results = [_grid_cell(it) for it in items]
+    else:
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=min(jobs, len(items))) as ex:
+            results = list(ex.map(_grid_cell, items))
+    return {(sc, pol): (res, det) for sc, pol, res, det in results}

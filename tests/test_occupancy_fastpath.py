@@ -1,0 +1,328 @@
+"""Occupancy-aware fast path: the vectorized calibrated service replay
+(``request_plane.occupancy_replay``), control-window fusion, the
+parallel scenario grid, and the columnar-log satellites (lazy rule
+strings, grouped windowed percentiles, order-statistic bootstrap CIs).
+"""
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.routing import CalibratedLatencyModel, LatencyModel, SimConfig, \
+    simulate
+from repro.routing.simulator import RequestLog
+from repro.sim import CoSim, CoSimConfig
+from repro.sim.request_plane import RULE_CODE, occupancy_replay
+from repro.sim.scenarios import SCENARIOS, hot_zone_topology, run_grid, \
+    run_scenario
+
+
+# ---------------------------------------------------------------------------
+# occupancy_replay vs the scalar (heap-arithmetic) reference
+# ---------------------------------------------------------------------------
+
+def _scalar_reference(t, pending, service_ms_fn):
+    """The pre-vectorization per-request loop, verbatim: pop completed,
+    serve at current occupancy, push own completion."""
+    pend = list(pending)
+    heapq.heapify(pend)
+    service = np.empty(t.size)
+    for k, tk in enumerate(t):
+        while pend and pend[0] <= tk:
+            heapq.heappop(pend)
+        s = service_ms_fn(len(pend))
+        service[k] = s
+        heapq.heappush(pend, tk + s / 1000.0)
+    return service, np.sort(np.asarray(pend, dtype=np.float64))
+
+
+def _calibrated_fn(base_ms, slots, stretch=1.0):
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": base_ms},
+                                 tier_slots={"edge": slots})
+    return lambda occ: lat.infer_ms("edge", occupancy=occ) * stretch
+
+
+@pytest.mark.parametrize("slots,load_mult,seed", [
+    (1, 0.5, 0),       # single slot, underloaded: mostly bulk
+    (1, 1.5, 1),       # single slot, overloaded: mostly scalar
+    (2, 1.0, 2),       # critically loaded at the boundary
+    (4, 0.95, 3),      # grazing the slot count from below
+    (4, 1.05, 4),      # grazing it from above
+    (8, 2.0, 5),       # deep oversubscription stretches
+])
+def test_occupancy_replay_bit_exact(slots, load_mult, seed):
+    """The vectorized replay is bit-identical to the scalar loop —
+    service arrays AND carried pending state — across under-, over-
+    and boundary-loaded regimes."""
+    rng = np.random.default_rng(seed)
+    base_ms = 40.0
+    rate = slots / (base_ms / 1000.0) * load_mult
+    t = np.cumsum(rng.exponential(1.0 / rate, size=3000))
+    fn = _calibrated_fn(base_ms, slots)
+    got_s, got_p = occupancy_replay(t, np.zeros(0), base_ms, float(slots),
+                                    fn)
+    want_s, want_p = _scalar_reference(t, np.zeros(0), fn)
+    assert np.array_equal(got_s, want_s)
+    assert np.array_equal(got_p, want_p)
+
+
+def test_occupancy_replay_resumes_across_windows():
+    """Pending state carried across flush windows equals one long
+    replay — the co-sim cuts windows at arbitrary control events."""
+    rng = np.random.default_rng(11)
+    base_ms, slots = 30.0, 3
+    rate = slots / (base_ms / 1000.0)
+    t = np.cumsum(rng.exponential(1.0 / rate, size=4000))
+    fn = _calibrated_fn(base_ms, slots)
+    want_s, want_p = _scalar_reference(t, np.zeros(0), fn)
+    pend = np.zeros(0)
+    parts = []
+    for chunk in np.array_split(t, 17):
+        s, pend = occupancy_replay(chunk, pend, base_ms, float(slots), fn)
+        parts.append(s)
+    assert np.array_equal(np.concatenate(parts), want_s)
+    assert np.array_equal(pend, want_p)
+
+
+def test_occupancy_replay_with_interference_stretch():
+    """The flat base is base x stretch — exactly what a window under
+    training interference hands the replay."""
+    rng = np.random.default_rng(5)
+    base_ms, slots, stretch = 25.0, 2, 1.75
+    t = np.cumsum(rng.exponential(0.012, size=2000))
+    fn = _calibrated_fn(base_ms, slots, stretch)
+    got_s, got_p = occupancy_replay(t, np.zeros(0), base_ms * stretch,
+                                    float(slots), fn)
+    want_s, want_p = _scalar_reference(t, np.zeros(0), fn)
+    assert np.array_equal(got_s, want_s)
+    assert np.array_equal(got_p, want_p)
+
+
+def test_occupancy_replay_boundary_fuzz():
+    """Seeded fuzz of the oversubscription boundary: occupancy grazing
+    ``slots`` is where the bulk run's cut decision must agree with the
+    scalar recursion to the bit.  Sweeps rates around the knee with
+    random carried-over pending arrays."""
+    rng = np.random.default_rng(99)
+    for trial in range(60):
+        slots = int(rng.integers(1, 6))
+        base_ms = float(rng.uniform(5.0, 80.0))
+        load = float(rng.uniform(0.8, 1.2))     # hover at the knee
+        rate = slots / (base_ms / 1000.0) * load
+        n = int(rng.integers(50, 800))
+        t0 = float(rng.uniform(0.0, 2.0))
+        t = t0 + np.cumsum(rng.exponential(1.0 / rate, size=n))
+        n_pend = int(rng.integers(0, 2 * slots + 2))
+        pend = np.sort(t0 + rng.uniform(-0.05, 0.2, size=n_pend))
+        fn = _calibrated_fn(base_ms, slots)
+        got_s, got_p = occupancy_replay(t, pend, base_ms, float(slots), fn)
+        want_s, want_p = _scalar_reference(t, pend, fn)
+        assert np.array_equal(got_s, want_s), \
+            (trial, slots, base_ms, load)
+        assert np.array_equal(got_p, want_p), \
+            (trial, slots, base_ms, load)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: calibrated co-sim stays bit-identical to the heap engine
+# ---------------------------------------------------------------------------
+
+def _training(duration):
+    from repro.fl import round_schedule
+    rounds = max(int(duration / 20.0), 1)
+    return round_schedule(rounds=rounds, l=2, local_epochs=5, epoch_s=3.5,
+                          upload_s=2.0, gap_s=2.0)
+
+
+@pytest.mark.parametrize("slots,service_ms", [(1, 60.0), (2, 40.0),
+                                              (6, 120.0)])
+def test_calibrated_oversubscribed_cosim_parity(slots, service_ms):
+    """Heap-vs-batched bit-identity through the vectorized occupancy
+    replay on configurations that genuinely oversubscribe the edges
+    (deep queues, not just boundary grazing)."""
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": service_ms},
+                                 tier_slots={"edge": slots})
+    logs = {}
+    for engine in ("heap", "batched"):
+        topo, *_ = hot_zone_topology(seed=1)
+        cfg = CoSimConfig(duration_s=40.0, seed=1, engine=engine,
+                          latency=lat)
+        logs[engine] = CoSim(topo, cfg, schedule=_training(40.0)).run().log
+    assert np.array_equal(logs["heap"].latency_ms,
+                          logs["batched"].latency_ms)
+    assert np.array_equal(logs["heap"].rule_code,
+                          logs["batched"].rule_code)
+
+
+def test_calibrated_scenario_engine_parity():
+    """The scenario engine (reactive loop + perturbations) through a
+    calibrated model: both engines, same control fingerprint."""
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": 40.0},
+                                 tier_slots={"edge": 2})
+    rb = run_scenario(SCENARIOS["churn"](), policy="reactive", seed=0,
+                      duration_s=45.0, engine="batched", latency=lat)
+    rh = run_scenario(SCENARIOS["churn"](), policy="reactive", seed=0,
+                      duration_s=45.0, engine="heap", latency=lat)
+    assert rb.control_fingerprint() == rh.control_fingerprint()
+    assert np.array_equal(rb.log.latency_ms, rh.log.latency_ms)
+
+
+# ---------------------------------------------------------------------------
+# control-window fusion: trace equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sc_name,policy", [
+    ("baseline", "static"), ("straggler", "reactive"),
+    ("mobility", "budgeted"), ("multi_tenant", "reactive"),
+    ("churn", "budgeted")])
+def test_fused_windows_trace_equivalent(sc_name, policy):
+    """Fused and unfused runs of the same (scenario, policy, seed) must
+    produce identical full traces, request logs, and reactive actions —
+    the fusion guarantee across the scenario suite."""
+    fused = run_scenario(SCENARIOS[sc_name](), policy=policy, seed=0,
+                         duration_s=60.0, fuse_windows=True)
+    plain = run_scenario(SCENARIOS[sc_name](), policy=policy, seed=0,
+                         duration_s=60.0, fuse_windows=False)
+    assert fused.fingerprint() == plain.fingerprint()
+    assert fused.control_fingerprint() == plain.control_fingerprint()
+    assert np.array_equal(fused.log.latency_ms, plain.log.latency_ms)
+    assert fused.log.rule == plain.log.rule
+    assert fused.actions == plain.actions
+    assert fused.trace == plain.trace
+
+
+def test_fusion_actually_fires():
+    """A continual-training co-sim must fuse some windows (ROUND_START
+    is effect-free; straggler-cancelled epoch events are no-ops) —
+    guard against the gate silently degrading to flush-always."""
+    topo, *_ = hot_zone_topology(seed=0)
+    cfg = CoSimConfig(duration_s=60.0, seed=0)
+    cosim = CoSim(topo, cfg, schedule=_training(60.0))
+    cosim.schedule_straggler(12.0, 0, 4.0)
+    cosim.run()
+    assert cosim.sim.fused_windows > 0
+    unfused = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0,
+                                      fuse_windows=False),
+                    schedule=_training(60.0))
+    unfused.run()
+    assert unfused.sim.fused_windows == 0
+
+
+def test_fusion_overlapping_bursts_equivalent():
+    """Overlapping training bursts make devices busy twice over —
+    exactly the regime where epoch boundaries stop flipping the busy
+    flag and fuse.  Results must not change."""
+    results = {}
+    for fuse in (True, False):
+        topo, *_ = hot_zone_topology(seed=2)
+        cfg = CoSimConfig(duration_s=50.0, seed=2, fuse_windows=fuse)
+        cosim = CoSim(topo, cfg, schedule=_training(50.0))
+        from repro.fl import round_schedule
+        cosim.add_training(round_schedule(rounds=2, l=2, local_epochs=3,
+                                          epoch_s=5.0, upload_s=2.0,
+                                          start_s=7.0))
+        res = cosim.run()
+        results[fuse] = (res.log.latency_ms, res.trace,
+                        cosim.sim.fused_windows)
+    assert np.array_equal(results[True][0], results[False][0])
+    assert results[True][1] == results[False][1]
+    assert results[True][2] > results[False][2] == 0
+
+
+# ---------------------------------------------------------------------------
+# parallel scenario grid
+# ---------------------------------------------------------------------------
+
+def test_run_grid_parallel_matches_serial():
+    """jobs=2 over the process pool returns bit-identical cells (same
+    fingerprints, same summary numbers) in the same order as serial."""
+    names = ("straggler", "mobility")
+    serial = run_grid(names, ("static", "reactive"), jobs=1,
+                      check_determinism=True, seed=0, duration_s=40.0)
+    parallel = run_grid(names, ("static", "reactive"), jobs=2,
+                        check_determinism=False, seed=0, duration_s=40.0)
+    assert list(serial) == list(parallel)
+    for key in serial:
+        s, det = serial[key]
+        p, _ = parallel[key]
+        assert det is True
+        assert s.fingerprint() == p.fingerprint()
+        assert s.p95 == p.p95 and s.n_requests == p.n_requests
+
+
+# ---------------------------------------------------------------------------
+# columnar-log satellites
+# ---------------------------------------------------------------------------
+
+def test_request_log_lazy_rules():
+    codes = np.array([0, 2, 5, 2], dtype=np.int8)
+    log = RequestLog(t=np.arange(4.0), device=np.zeros(4, np.int64),
+                     tier=np.zeros(4, np.int64),
+                     latency_ms=np.ones(4), rule_code=codes)
+    assert log._rule_names is None          # nothing materialized yet
+    assert log.rule == ["R1", "R2-local", "R3-overflow", "R2-local"]
+    assert log.rule is log.rule             # cached
+    assert np.array_equal(log.rule_code, codes)
+    # legacy constructor (string names) still round-trips
+    legacy = RequestLog(t=np.zeros(2), device=np.zeros(2, np.int64),
+                        tier=np.zeros(2, np.int64),
+                        rule=["R1", "R3-overflow"],
+                        latency_ms=np.zeros(2))
+    assert np.array_equal(legacy.rule_code,
+                          [RULE_CODE["R1"], RULE_CODE["R3-overflow"]])
+    assert legacy.rule == ["R1", "R3-overflow"]
+
+
+def test_simulate_log_defers_rule_strings():
+    topo, *_ = hot_zone_topology(seed=0)
+    log = simulate(topo, SimConfig(duration_s=10.0, seed=0))
+    assert log._rule_names is None
+    assert log.rule_code.dtype == np.int8
+    assert len(log.rule) == log.t.size
+
+
+def test_windowed_percentile_matches_naive():
+    """The grouped-sort windowed percentile equals the per-window
+    np.percentile loop it replaced, NaN rows included."""
+    rng = np.random.default_rng(3)
+    t = np.sort(rng.uniform(0.0, 100.0, 4000))
+    t = t[(t < 40.0) | (t > 60.0)]          # force empty windows
+    lat = rng.exponential(15.0, t.size)
+    log = RequestLog(t=t, device=np.zeros(t.size, np.int64),
+                     tier=np.zeros(t.size, np.int64),
+                     latency_ms=lat,
+                     rule_code=np.zeros(t.size, np.int8))
+    for window_s, p in ((5.0, 95.0), (7.3, 50.0), (10.0, 99.0)):
+        got = log.windowed_percentile(window_s, p)
+        edges = np.arange(0.0, float(t[-1]) + 1e-9, window_s)
+        bounds = np.searchsorted(t, np.append(edges,
+                                              edges[-1] + window_s))
+        assert got.shape == (edges.size, 2)
+        assert np.array_equal(got[:, 0], edges)
+        for k in range(edges.size):
+            sl = lat[bounds[k]:bounds[k + 1]]
+            if sl.size == 0:
+                assert np.isnan(got[k, 1])
+            else:
+                assert got[k, 1] == pytest.approx(
+                    float(np.percentile(sl, p)), rel=1e-12)
+
+
+def test_percentile_ci_brackets_point_estimate():
+    rng = np.random.default_rng(0)
+    lat = rng.exponential(10.0, 20000)
+    log = RequestLog(t=np.sort(rng.uniform(0, 100, lat.size)),
+                     device=np.zeros(lat.size, np.int64),
+                     tier=np.zeros(lat.size, np.int64),
+                     latency_ms=lat,
+                     rule_code=np.zeros(lat.size, np.int8))
+    p95 = log.percentile_latency(95)
+    lo, hi = log.percentile_ci(95)
+    assert lo <= p95 <= hi
+    assert hi - lo < 0.2 * p95              # tight at 20k samples
+    assert (lo, hi) == log.percentile_ci(95)   # deterministic
+    empty = RequestLog(t=np.zeros(0), device=np.zeros(0, np.int64),
+                       tier=np.zeros(0, np.int64),
+                       latency_ms=np.zeros(0),
+                       rule_code=np.zeros(0, np.int8))
+    assert all(np.isnan(v) for v in empty.percentile_ci(95))

@@ -81,3 +81,41 @@ def test_costmodel_monotonic_in_rounds(seed, n, m):
     a = flat_fl_cost(n, 10)
     b = flat_fl_cost(n, 20)
     assert b.metered_bytes == 2 * a.metered_bytes
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6),                    # slots
+       st.floats(5.0, 80.0),                 # base service ms
+       st.floats(0.75, 1.25),                # load vs the occupancy knee
+       st.integers(0, 10_000),               # arrival seed
+       st.integers(0, 12))                   # carried-over pending count
+def test_occupancy_replay_boundary_property(slots, base_ms, load, seed,
+                                            n_pend):
+    """Property fuzz of the oversubscription boundary: with the offered
+    load hovering at the occupancy knee (occupancy grazing ``slots``),
+    the vectorized calibrated replay must stay bit-identical to the
+    scalar per-request recursion — services AND carried pending state."""
+    import heapq
+    from repro.routing import CalibratedLatencyModel
+    from repro.sim.request_plane import occupancy_replay
+
+    lat = CalibratedLatencyModel(tier_service_ms={"edge": base_ms},
+                                 tier_slots={"edge": slots})
+    fn = lambda occ: lat.infer_ms("edge", occupancy=occ)  # noqa: E731
+    rng = np.random.default_rng(seed)
+    rate = slots / (base_ms / 1000.0) * load
+    t = np.cumsum(rng.exponential(1.0 / rate, size=400))
+    pend = np.sort(rng.uniform(0.0, float(t[min(20, t.size - 1)]),
+                               size=n_pend))
+    got_s, got_p = occupancy_replay(t, pend, base_ms, float(slots), fn)
+    svc = np.empty(t.size)
+    heap = pend.tolist()
+    heapq.heapify(heap)
+    for k, tk in enumerate(t):
+        while heap and heap[0] <= tk:
+            heapq.heappop(heap)
+        s = fn(len(heap))
+        svc[k] = s
+        heapq.heappush(heap, tk + s / 1000.0)
+    assert np.array_equal(got_s, svc)
+    assert np.array_equal(got_p, np.sort(np.asarray(heap)))
