@@ -5,6 +5,7 @@ Default mode is the fast sweep (minutes on this 2-core container); the
 full-scale curves are behind per-module CLIs:
 
   python -m benchmarks.fig6_continual_fl --rounds 100    # full Fig. 6
+  python -m benchmarks.fig2_solver_scaling --scale       # 10^5-10^6 curve
   python -m repro.launch.dryrun                          # 68-combo sweep
   python -m benchmarks.roofline_report                   # tables from it
 """
@@ -47,6 +48,11 @@ def main() -> None:
         perf_event_throughput.run(duration_s=240.0, parity_duration_s=45.0,
                                   calibrated_duration_s=60.0,
                                   calibrated_rate_scale=50.0)
+        print("# --- decomposed-solver smoke (10^5 devices + exact-gap "
+              "subsamples, BENCH_solver.json) ---", file=sys.stderr)
+        from benchmarks import fig2_solver_scaling
+        fig2_solver_scaling.run_decomposed(sizes=((100_000, 200),),
+                                           sub_seeds=2)
         _maybe_write_json(args.json)
         return
 

@@ -47,3 +47,33 @@ if ratio is not None:
     print(f"calibrated path within {ratio:.2f}x of the constant model "
           f"(target: ~3x)")
 EOF
+
+# decomposed-solver record (written by the smoke above): feasibility
+# and the exact-gap bound are hard requirements; wall time gets a soft
+# floor like the engine throughput (shared runners are noisy).
+python - <<'EOF'
+import json, sys
+
+SOFT_WALL_S = 10.0                 # 10^5-device smoke instance
+GAP_BOUND = 0.05                   # vs exact B&B on subsamples (hard)
+data = json.load(open("BENCH_solver.json"))
+for row in data["sizes"]:
+    if not row["feasible"]:
+        sys.exit(f"decomposed solve infeasible at n={row['n']}")
+    tag = f"decomposed n={row['n']:,} m={row['m']:,}"
+    if row["wall_s"] > SOFT_WALL_S:
+        print(f"WARNING: {tag} took {row['wall_s']:.1f}s — above the "
+              f"soft floor of {SOFT_WALL_S:.0f}s")
+    else:
+        print(f"{tag} OK: {row['wall_s']:.2f}s "
+              f"({row['devices_per_s']:,.0f} devices/s), cost "
+              f"{row['cost_vs_greedy']:+.0%} vs greedy")
+gap = data.get("max_subsample_gap")
+if gap is None:
+    print("WARNING: no exact-gap subsamples in BENCH_solver.json")
+elif gap > GAP_BOUND:
+    sys.exit(f"decomposed subsample gap {gap:.3f} > {GAP_BOUND}")
+else:
+    print(f"decomposed exact-gap OK: {gap:.4f} <= {GAP_BOUND} over "
+          f"{len(data['subsample_gaps'])} subsamples")
+EOF

@@ -6,8 +6,11 @@ from repro.core.hflop import (HFLOPInstance, HFLOPSolution, build_ilp,
                               is_feasible, objective, paper_cost_instance,
                               random_instance, violations)
 from repro.core.solvers import (local_search, solve_bnb, solve_bruteforce,
-                                solve_greedy, solve_heuristic,
-                                solve_uncapacitated)
+                                solve_decomposed, solve_greedy,
+                                solve_heuristic, solve_uncapacitated)
+from repro.core.partition import (LanHFLOPInstance, Partition,
+                                  default_regions, paper_cost_lan,
+                                  partition_instance, sub_instance)
 from repro.core.costmodel import (GRU_MODEL_BYTES, CostReport, flat_fl_cost,
                                   hfl_cost, savings_vs_flat)
 from repro.core.topology import ClusterTopology
@@ -15,8 +18,10 @@ from repro.core.topology import ClusterTopology
 __all__ = [
     "HFLOPInstance", "HFLOPSolution", "build_ilp", "is_feasible",
     "objective", "paper_cost_instance", "random_instance", "violations",
-    "local_search", "solve_bnb", "solve_bruteforce", "solve_greedy",
-    "solve_heuristic", "solve_uncapacitated", "GRU_MODEL_BYTES",
+    "local_search", "solve_bnb", "solve_bruteforce", "solve_decomposed",
+    "solve_greedy", "solve_heuristic", "solve_uncapacitated",
+    "LanHFLOPInstance", "Partition", "default_regions", "paper_cost_lan",
+    "partition_instance", "sub_instance", "GRU_MODEL_BYTES",
     "CostReport", "flat_fl_cost", "hfl_cost", "savings_vs_flat",
     "ClusterTopology",
 ]

@@ -15,7 +15,7 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.hflop import HFLOPInstance, HFLOPSolution, is_feasible
-from repro.core.solvers import solve_bnb, solve_heuristic
+from repro.core.solvers import solve_bnb, solve_decomposed, solve_heuristic
 from repro.core.topology import ClusterTopology
 from repro.orchestration.gpo import Inventory
 
@@ -75,19 +75,52 @@ class LearningController:
     l: int = 2
     T: Optional[int] = None
     exact: bool = False              # exact B&B vs heuristic clustering
+    decompose_above: int = 5000      # inventories at/above this size go
+    #                                  through the decomposed solver
     accuracy_threshold: float = 0.06 # MSE above this triggers retraining
     serving_tiers: Optional[Sequence["TierSpec"]] = None  # None -> no pool
     deployment: Optional[Deployment] = None
     solution: Optional[HFLOPSolution] = None
     recluster_count: int = 0
 
+    def _solve(self, inst: HFLOPInstance) -> HFLOPSolution:
+        if self.exact:
+            return solve_bnb(inst)
+        if inst.n >= self.decompose_above:
+            return solve_decomposed(inst)
+        return solve_heuristic(inst)
+
     def cluster(self) -> ClusterTopology:
         inst = self.inventory.to_instance(l=self.l, T=self.T)
-        sol = solve_bnb(inst) if self.exact else solve_heuristic(inst)
-        if not is_feasible(inst, sol.assign):
+        reliable = np.asarray([d.reliable for d in self.inventory.devices],
+                              bool)
+        if reliable.all():
+            sol = self._solve(inst)
+            if not is_feasible(inst, sol.assign):
+                raise RuntimeError("clustering produced infeasible topology")
+            self.solution = sol
+            return ClusterTopology.from_solution(inst, sol)
+        # solve over the reliable subset only: persistently
+        # deadline-missing devices keep serving inference but no longer
+        # gate training rounds (assign stays -1 -> the router treats
+        # them like any non-participant)
+        idx = np.nonzero(reliable)[0]
+        sub = HFLOPInstance(inst.c_d[idx], inst.c_e, inst.lam[idx],
+                            inst.r, l=inst.l,
+                            T=(min(self.T, int(idx.size))
+                               if self.T is not None else None))
+        sub_sol = self._solve(sub)
+        if not is_feasible(sub, sub_sol.assign):
             raise RuntimeError("clustering produced infeasible topology")
-        self.solution = sol
-        return ClusterTopology.from_solution(inst, sol)
+        assign = np.full(inst.n, -1, int)
+        assign[idx] = sub_sol.assign
+        self.solution = HFLOPSolution(
+            assign, sub_sol.cost, optimal=sub_sol.optimal,
+            solver=sub_sol.solver,
+            meta=dict(sub_sol.meta, reliable_devices=int(idx.size)))
+        return ClusterTopology(assign=assign, n_devices=inst.n,
+                               n_edges=inst.m, lam=inst.lam, r=inst.r,
+                               l=inst.l)
 
     def deploy(self) -> Deployment:
         topo = self.cluster()
@@ -138,6 +171,19 @@ class LearningController:
         False (budget-deferred or inside the recluster cooldown),
         re-solve HFLOP around the new cost structure."""
         self.inventory.devices[device_id].lan_edge = new_edge
+        if not redeploy:
+            return None
+        self.recluster_count += 1
+        return self.deploy()
+
+    def on_unreliable_devices(self, device_ids: Sequence[int],
+                              redeploy: bool = True
+                              ) -> Optional[Deployment]:
+        """Persistent stragglers: mark them unreliable so the next
+        clustering excludes them from training, and (unless the budget
+        defers it) re-solve HFLOP over the reliable subset right away."""
+        for i in device_ids:
+            self.inventory.devices[int(i)].reliable = False
         if not redeploy:
             return None
         self.recluster_count += 1

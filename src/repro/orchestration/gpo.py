@@ -58,9 +58,11 @@ class Inventory:
                     T: Optional[int] = None) -> HFLOPInstance:
         n, m = len(self.devices), len(self.edges)
         c_d = np.full((n, m), self.unit_cost)
-        for d in self.devices:
-            if d.lan_edge is not None:
-                c_d[d.id, d.lan_edge] = 0.0
+        rows = np.asarray([d.id for d in self.devices
+                           if d.lan_edge is not None], int)
+        cols = np.asarray([d.lan_edge for d in self.devices
+                           if d.lan_edge is not None], int)
+        c_d[rows, cols] = 0.0
         c_e = np.asarray([e.cloud_cost for e in self.edges])
         lam = np.asarray([d.lam for d in self.devices])
         r = np.asarray([e.capacity_rps for e in self.edges])

@@ -18,7 +18,9 @@ Monitors emit telemetry on the shared event core and drive the
                      re-cluster around the dead edge
   straggler monitor  ``STRAGGLER`` events -> deadline check -> drop the
                      device from rounds it can no longer finish in time
-                     (partial aggregation)
+                     (partial aggregation); devices that keep missing
+                     deadlines are marked unreliable and HFLOP is
+                     re-solved without them (``unreliable_after_drops``)
   mobility monitor   ``DEVICE_MOVE`` events -> update the inventory's
                      LAN association and re-cluster, budget permitting
 
@@ -102,6 +104,9 @@ class ReactivePolicy:
     restore_idle_s: float = 20.0     # training idle this long -> restore
     #                                  nominal capacities (and re-cluster)
     drop_stragglers: bool = True     # deadline-based partial aggregation
+    unreliable_after_drops: Optional[int] = None  # total deadline drops
+    #                                  before a device is marked unreliable
+    #                                  and re-clustered out (None: off)
     recluster_on_move: bool = True   # re-solve HFLOP after a handover
     budget_exempt_failures: bool = True  # failure reclusters are
     #                                  correctness, not optimization: they
@@ -124,6 +129,8 @@ class ReactiveLoop:
         # computed from here so repeated alarms don't compound, and
         # capacities are restored once training goes idle
         self._nominal_caps: Dict[int, float] = {}
+        # device -> cumulative deadline drops (straggler monitor)
+        self._drop_counts: Dict[int, int] = {}
         # topology edge id -> inventory index.  Identity right after a
         # deployment goes live; diverges when a failure renumbers the
         # inventory while the budget defers the re-deploy.
@@ -319,15 +326,51 @@ class ReactiveLoop:
              f"({len(info)} active round(s) affected)"))
         if not self.policy.drop_stragglers:
             return
+        rounds_dropped = 0
         for sid, w, projected_end in info:
             if projected_end > w.upload_end + 1e-9:
                 dropped = self.cosim.drop_from_round(i, sid, w.index)
                 if dropped:
+                    rounds_dropped += 1
                     self.actions.append(
                         (ev.t, f"device {i} projected to finish round "
                          f"{w.index} at t={projected_end:.1f}s > deadline "
                          f"{w.upload_end:.1f}s -> dropped ({dropped} "
                          "epochs cancelled, partial aggregation)"))
+        if rounds_dropped:
+            self._note_drops(ev.t, i, rounds_dropped)
+
+    def _note_drops(self, t: float, i: int, rounds_dropped: int) -> None:
+        """Straggler re-clustering: a device that keeps missing upload
+        deadlines is marked ``reliable=False`` in the inventory and
+        HFLOP is re-solved without it (it keeps serving inference, but
+        stops gating rounds).  The re-deploy is metered like any other
+        optional recluster — on a spent budget or inside the cooldown
+        only the mark is recorded, and the next recluster from any
+        monitor picks it up."""
+        thresh = self.policy.unreliable_after_drops
+        if thresh is None:
+            return
+        self._drop_counts[i] = self._drop_counts.get(i, 0) + rounds_dropped
+        devices = self.controller.inventory.devices
+        if (self._drop_counts[i] < thresh or i >= len(devices)
+                or not devices[i].reliable):
+            return
+        reason = f"unreliable recluster (device {i})"
+        if (t - self.last_recluster_t < self.policy.cooldown_s
+                or not self._budget_allows(t, reason)):
+            self.controller.on_unreliable_devices([i], redeploy=False)
+            self.actions.append(
+                (t, f"device {i} marked unreliable after "
+                 f"{self._drop_counts[i]} deadline drops; recluster "
+                 "deferred"))
+            return
+        dep = self.controller.on_unreliable_devices([i])
+        if dep is not None and self._apply(dep, t, reason=reason):
+            self.actions.append(
+                (t, f"device {i} marked unreliable after "
+                 f"{self._drop_counts[i]} deadline drops -> re-clustered "
+                 "without it"))
 
     def on_device_move(self, sim: Simulation, ev: Event) -> None:
         """The co-sim has already re-homed the device's requests and

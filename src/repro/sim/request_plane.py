@@ -39,7 +39,6 @@ rescanning the whole request history.
 """
 from __future__ import annotations
 
-import heapq
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -304,14 +303,26 @@ def occupancy_replay(t: np.ndarray, pending: np.ndarray, base_ms: float,
         arrival whose hypothesized occupancy reaches ``slots`` — where
         service departs from the base and the recursion genuinely
         couples — cuts the run; everything before it is exact;
-      * **oversubscribed** — replayed with the verbatim scalar
-        heap arithmetic (pop completions ``<= t_k``, serve at
-        ``service_ms_fn(len(pending))``, push ``t_k + s_k/1000``)
-        until occupancy falls back below ``slots``, then back to bulk.
+      * **oversubscribed** — bulk-served in *runs of constant
+        occupancy*: when arrival ``k`` observes occupancy ``L``, the
+        replay hypothesizes that the whole next chunk stays at level
+        ``L`` — every service is then the same ``service_ms_fn(L)``,
+        completions are ``t + s/1000`` (the identical float add the
+        scalar heap push performs), and each arrival's occupancy under
+        the hypothesis is reconstructed exactly from two
+        ``searchsorted`` counts (carried completions still in flight
+        plus in-run predecessors not yet done).  The first arrival
+        whose reconstructed occupancy differs from ``L`` cuts the run
+        — everything before it is exact, and the occupancy *at* the
+        cut is also exact, so the replay either drops to bulk
+        (occupancy back under ``slots``) or re-buckets at the new
+        level.  Cost scales with the number of occupancy-level
+        *changes*, not with the number of oversubscribed arrivals.
 
-    Bit-identical to the all-scalar replay by construction: the bulk
-    regime performs the same float operations on the same operands, and
-    the cut point is decided from exactly reconstructed occupancies."""
+    Bit-identical to the all-scalar replay by construction: both
+    regimes perform the same float operations on the same operands
+    (integer occupancy counts are exact), and every cut point is
+    decided from exactly reconstructed occupancies."""
     n = t.size
     service = np.empty(n, dtype=np.float64)
     p = np.asarray(pending, dtype=np.float64)
@@ -339,21 +350,34 @@ def occupancy_replay(t: np.ndarray, pending: np.ndarray, base_ms: float,
         service[a:a + v] = base_ms           # exact flat prefix ...
         if v > 0:
             p = _merge_pending(p, c[:v], float(tc[v - 1]))
-        # ... then scalar replay while oversubscribed (a sorted array
-        # is already a valid min-heap)
-        heap = p.tolist()
+        # ... then level-bucketed replay while oversubscribed: runs of
+        # equal occupancy share one service value, so they commit in
+        # bulk; the hypothesized occupancies are exact integer counts,
+        # and the first level change cuts the run
         k = a + v
+        lchunk = _CHUNK0
         while k < n:
             tk = t[k]
-            while heap and heap[0] <= tk:
-                heapq.heappop(heap)
-            if len(heap) < slots:            # recovered: back to bulk
+            p = p[np.searchsorted(p, tk, side="right"):]   # drain pops
+            occ = p.size
+            if occ < slots:                  # recovered: back to bulk
                 break
-            s_k = service_ms_fn(len(heap))
-            service[k] = s_k
-            heapq.heappush(heap, tk + s_k / 1000.0)
-            k += 1
-        p = np.sort(np.asarray(heap, dtype=np.float64))
+            s_k = service_ms_fn(occ)
+            sc = s_k / 1000.0
+            e = min(k + lchunk, n)
+            run_t = t[k:e]
+            cr = run_t + sc                  # completions if level holds
+            alive = p.size - np.searchsorted(p, run_t, side="right")
+            done = np.minimum(np.searchsorted(cr, run_t, side="right"),
+                              rel[:e - k])
+            occ_run = alive + rel[:e - k] - done
+            lvl_break = occ_run != occ       # occ_run[0] == occ always
+            w = int(np.argmax(lvl_break)) if lvl_break.any() else e - k
+            service[k:k + w] = s_k
+            p = _merge_pending(p, cr[:w], float(run_t[w - 1]))
+            lchunk = (min(lchunk * 4, _CHUNK_MAX) if w == e - k
+                      else _CHUNK0)
+            k += w
         a, chunk = k, _CHUNK0
     return service, p
 

@@ -122,6 +122,32 @@ def hot_zone_topology(seed: int = 0, n: int = 20, m: int = 4,
     return topo, loc, lam, r
 
 
+def continuum_topology(seed: int = 0, n: int = 200, m: int = 8,
+                       capacity_slack: float = 1.3, l: int = 2,
+                       T: Optional[int] = None,
+                       ) -> Tuple[ClusterTopology, np.ndarray, np.ndarray,
+                                  np.ndarray]:
+    """A paper-cost continuum whose initial deployment comes from the
+    decomposed HFLOP solver instead of the hand-built zone assignment —
+    the scenario grid perturbs a topology the solver actually produced,
+    at any scale (the LAN instance never materializes an (n, m) cost
+    matrix).  Same return shape as :func:`hot_zone_topology`:
+    (topology, LAN edge per device, rates, capacities)."""
+    from repro.core.partition import paper_cost_lan
+    from repro.core.solvers import solve_decomposed
+    inst = paper_cost_lan(n, m, seed=seed, l=l,
+                          capacity_slack=capacity_slack)
+    if T is not None:
+        inst = type(inst)(free=inst.free, c_e=inst.c_e, lam=inst.lam,
+                          r=inst.r, unit_cost=inst.unit_cost, l=inst.l,
+                          T=T)
+    sol = solve_decomposed(inst)
+    topo = ClusterTopology(assign=np.asarray(sol.assign, int),
+                           n_devices=n, n_edges=m, lam=inst.lam,
+                           r=inst.r, l=inst.l)
+    return topo, inst.free.copy(), inst.lam, inst.r
+
+
 def continual_training(duration_s: float, l: int = 2,
                        ) -> Sequence:
     """Back-to-back HFL rounds covering the horizon (continual
@@ -256,6 +282,8 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
                  engine: str = "batched",
                  latency: Optional[LatencyModel] = None,
                  fuse_windows: bool = True,
+                 topology: Optional[Tuple[ClusterTopology, np.ndarray,
+                                          np.ndarray, np.ndarray]] = None,
                  ) -> ScenarioResult:
     """One (scenario, policy, seed) cell of the grid.  ``engine``
     picks the request plane ("batched", default) or the per-request
@@ -264,11 +292,16 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
     events per request.  ``fuse_windows=False`` flushes the request
     plane at every control event (the pre-fusion behavior, same
     results); ``latency`` overrides the latency model (e.g. a
-    ``CalibratedLatencyModel`` for occupancy-coupled serving)."""
+    ``CalibratedLatencyModel`` for occupancy-coupled serving);
+    ``topology`` substitutes a pre-built continuum — e.g.
+    :func:`continuum_topology`'s solver-produced deployment — for the
+    default hot-zone draw (``n``/``m``/``hot``/``slack`` are then
+    ignored)."""
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
-    topo, loc, lam, r = hot_zone_topology(seed=seed, n=n, m=m, hot=hot,
-                                          slack=slack)
+    topo, loc, lam, r = (topology if topology is not None
+                         else hot_zone_topology(seed=seed, n=n, m=m,
+                                                hot=hot, slack=slack))
     cfg_kwargs = {} if latency is None else {"latency": latency}
     cfg = CoSimConfig(duration_s=duration_s, seed=seed, engine=engine,
                       fuse_windows=fuse_windows, **cfg_kwargs)

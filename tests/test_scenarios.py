@@ -13,8 +13,9 @@ from repro.orchestration import Inventory, LearningController
 from repro.orchestration.controller import Deployment
 from repro.sim import (CoSim, CoSimConfig, EventKind, InterferenceModel,
                        ReactiveLoop, ReactivePolicy, ReconfigBudget)
-from repro.sim.scenarios import (SCENARIOS, default_budget_total,
-                                 hot_zone_topology, run_scenario)
+from repro.sim.scenarios import (SCENARIOS, continuum_topology,
+                                 default_budget_total, hot_zone_topology,
+                                 run_scenario)
 
 
 def _topo(n=8, m=4, cap=20.0, lam=1.0):
@@ -93,6 +94,64 @@ def test_straggler_reaction_drops_device_at_deadline():
                for _, a in res.actions)
     # and the round still completes on time (partial aggregation)
     assert res.rounds_completed == 1
+
+
+def test_persistent_straggler_marked_unreliable_and_reclustered():
+    """unreliable_after_drops: once a device's deadline drops reach the
+    threshold it is marked ``reliable=False`` and HFLOP re-solves over
+    the reliable subset — the live topology excludes it."""
+    topo = _topo()
+    ctl, loop = _loop_for(topo, p95_threshold_ms=1e9,
+                          unreliable_after_drops=1)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=_one_round(), reactive=loop)
+    cosim.schedule_straggler(4.0, device_id=0, factor=10.0)
+    res = cosim.run()
+    assert not ctl.inventory.devices[0].reliable
+    assert ctl.recluster_count >= 1
+    assert cosim.proc.topo.assign[0] == -1
+    # everyone else still participates
+    assert int(np.sum(cosim.proc.topo.assign >= 0)) == topo.n_devices - 1
+    assert any("unreliable" in a and "re-clustered" in a
+               for _, a in res.actions)
+    # the expanded solution records how many devices it was solved over
+    assert ctl.solution.meta["reliable_devices"] == topo.n_devices - 1
+
+
+def test_unreliable_mark_deferred_on_spent_budget():
+    """A spent reconfig budget defers the re-deploy but still records
+    the unreliable mark — the stale topology keeps serving, and any
+    later recluster excludes the device."""
+    topo = _topo()
+    ctl, loop = _loop_for(topo, p95_threshold_ms=1e9,
+                          unreliable_after_drops=1)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=_one_round(), reactive=loop,
+                  budget=ReconfigBudget(total=0.0))
+    cosim.schedule_straggler(4.0, device_id=0, factor=10.0)
+    res = cosim.run()
+    assert not ctl.inventory.devices[0].reliable
+    assert cosim.proc.topo.assign[0] >= 0       # swap deferred
+    assert any("unreliable" in a and "deferred" in a
+               for _, a in res.actions)
+    # a later (budget-permitting) recluster picks the mark up
+    cosim.budget = None
+    dep = ctl.deploy()
+    assert dep.topology.assign[0] == -1
+
+
+def test_unreliable_off_by_default():
+    """The default policy never marks devices unreliable — drops alone
+    must not change the inventory."""
+    topo = _topo()
+    ctl, loop = _loop_for(topo, p95_threshold_ms=1e9)
+    cosim = CoSim(topo, CoSimConfig(duration_s=60.0, seed=0),
+                  schedule=_one_round(), reactive=loop)
+    cosim.schedule_straggler(4.0, device_id=0, factor=10.0)
+    res = cosim.run()
+    assert len(res.drop_log) == 1
+    assert all(d.reliable for d in ctl.inventory.devices)
+    assert ctl.recluster_count == 0
 
 
 def test_straggler_without_pending_epochs_is_noop():
@@ -320,6 +379,37 @@ def test_budget_exempt_failure_forces_through_spent_budget():
     assert len(res.reconfig_times) == 1
     assert budget.spent > budget.total           # overrun is visible
     assert [e.forced for e in budget.ledger if e.applied] == [True]
+
+
+# ---------------------------------------------------------------------------
+# solver-produced continuum feeding the scenario grid
+# ---------------------------------------------------------------------------
+
+def test_continuum_topology_is_solver_feasible():
+    """The decomposed solver's deployment seeds the scenario grid: all
+    devices participate, loads respect capacities, and the build is
+    deterministic."""
+    topo, loc, lam, r = continuum_topology(seed=3, n=120, m=6)
+    assert topo.participant_count() == 120
+    loads = np.bincount(topo.assign[topo.assign >= 0],
+                        weights=lam[topo.assign >= 0], minlength=6)
+    assert np.all(loads <= r + 1e-9)
+    topo2, loc2, _, _ = continuum_topology(seed=3, n=120, m=6)
+    assert np.array_equal(topo.assign, topo2.assign)
+    assert np.array_equal(loc, loc2)
+
+
+def test_run_scenario_accepts_prebuilt_topology():
+    """run_scenario(topology=...) swaps the hot-zone continuum for a
+    solver-produced one; same-seed runs stay reproducible."""
+    cont = continuum_topology(seed=0, n=60, m=4)
+    res = run_scenario(SCENARIOS["straggler"](), policy="reactive",
+                       seed=0, duration_s=40.0, topology=cont)
+    assert res.n_requests > 0 and res.rounds_completed >= 1
+    rerun = run_scenario(SCENARIOS["straggler"](), policy="reactive",
+                         seed=0, duration_s=40.0,
+                         topology=continuum_topology(seed=0, n=60, m=4))
+    assert res.fingerprint() == rerun.fingerprint()
 
 
 # ---------------------------------------------------------------------------

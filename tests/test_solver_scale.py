@@ -1,0 +1,282 @@
+"""The decomposed million-device solver stack: bit-compat of the
+vectorized greedy / LP-rounding rewrites against the pre-rewrite
+scalar loops (kept here verbatim as references), partition invariants,
+LAN-instance parity, decomposed-solver feasibility + determinism at
+scale, and the optimality gap vs exact B&B on paper-instance
+subsamples."""
+import numpy as np
+import pytest
+
+from repro.core import (HFLOPInstance, LanHFLOPInstance, is_feasible,
+                        objective, paper_cost_instance, paper_cost_lan,
+                        partition_instance, random_instance, solve_bnb,
+                        solve_decomposed, solve_greedy, sub_instance)
+from repro.core import solvers
+from repro.core.hflop import HFLOPSolution
+
+
+# ---------------------------------------------------------------------------
+# pre-rewrite reference implementations, verbatim — the vectorized
+# solvers must reproduce these decision-for-decision (bit-compat)
+# ---------------------------------------------------------------------------
+
+def _local_costs(inst, assign):
+    ok = assign >= 0
+    local = np.zeros(inst.n)
+    local[ok] = inst.c_d[np.arange(inst.n)[ok], assign[ok]] * inst.l
+    return local
+
+
+def ref_greedy(inst):
+    n, m = inst.n, inst.m
+    assign = np.full(n, -1, int)
+    load = np.zeros(m)
+    opened = np.zeros(m, bool)
+    order = np.argsort(-inst.lam)
+    for i in order:
+        costs = inst.c_d[i] * inst.l + np.where(opened, 0.0, inst.c_e)
+        feas = load + inst.lam[i] <= inst.r + 1e-12
+        costs = np.where(feas, costs, np.inf)
+        j = int(np.argmin(costs))
+        if np.isfinite(costs[j]):
+            assign[i] = j
+            load[j] += inst.lam[i]
+            opened[j] = True
+    for j in np.argsort(np.bincount(assign[assign >= 0] + 0,
+                                    minlength=m))[:m]:
+        if not opened[j]:
+            continue
+        members = np.nonzero(assign == j)[0]
+        if members.size == 0:
+            opened[j] = False
+            continue
+        delta = 0.0
+        moves = {}
+        load2 = load.copy()
+        ok = True
+        for i in members[np.argsort(-inst.lam[members])]:
+            costs = inst.c_d[i] * inst.l
+            feas = (load2 + inst.lam[i] <= inst.r + 1e-12) & opened
+            feas[j] = False
+            costs = np.where(feas, costs, np.inf)
+            k = int(np.argmin(costs))
+            if not np.isfinite(costs[k]):
+                ok = False
+                break
+            moves[i] = k
+            load2[k] += inst.lam[i]
+            delta += (inst.c_d[i, k] - inst.c_d[i, j]) * inst.l
+        if ok and delta < inst.c_e[j] - 1e-12:
+            for i, k in moves.items():
+                assign[i] = k
+            load = load2
+            load[j] = 0.0
+            opened[j] = False
+    surplus = int(np.sum(assign >= 0)) - inst.T
+    if surplus > 0:
+        local = _local_costs(inst, assign)
+        for i in np.argsort(-local):
+            if surplus <= 0 or assign[i] < 0:
+                break
+            if local[i] <= 0:
+                break
+            load[assign[i]] -= inst.lam[i]
+            assign[i] = -1
+            surplus -= 1
+    return assign
+
+
+def ref_round_lp(inst, xfrac):
+    n, m = inst.n, inst.m
+    xm = xfrac[:n * m].reshape(n, m)
+    assign = np.full(n, -1, int)
+    load = np.zeros(m)
+    order = np.argsort(-np.max(xm, axis=1))
+    for i in order:
+        for j in np.argsort(-xm[i]):
+            if xm[i, j] < 1e-9:
+                break
+            if load[j] + inst.lam[i] <= inst.r[j] + 1e-12:
+                assign[i] = j
+                load[j] += inst.lam[i]
+                break
+    if int(np.sum(assign >= 0)) < inst.T:
+        return None
+    v = np.zeros(n * m + m)
+    for i in range(n):
+        if assign[i] >= 0:
+            v[i * m + assign[i]] = 1.0
+    for j in np.unique(assign[assign >= 0]):
+        v[n * m + j] = 1.0
+    return v
+
+
+def _cases(seeds):
+    for s in seeds:
+        yield random_instance(25, 5, seed=s)
+        yield random_instance(40, 7, seed=s, T=30)
+        yield random_instance(12, 4, seed=s, capacity_slack=1.02, T=9)
+        yield paper_cost_instance(30, 5, seed=s)
+        yield paper_cost_instance(60, 8, seed=s, capacity_slack=1.1)
+
+
+def test_greedy_bit_compat_with_scalar_reference():
+    for k, inst in enumerate(_cases(range(12))):
+        want = ref_greedy(inst)
+        got = solve_greedy(inst)
+        assert np.array_equal(want, got.assign), f"case {k}"
+
+
+def test_round_lp_bit_compat_with_scalar_reference():
+    rng = np.random.default_rng(0)
+    for k in range(30):
+        inst = random_instance(18, 5, seed=k, T=14 if k % 2 else None)
+        xf = rng.uniform(0, 1, inst.n * inst.m + inst.m)
+        xf[rng.uniform(0, 1, xf.shape[0]) < 0.3] = 0.0  # hit the 1e-9 break
+        want = ref_round_lp(inst, xf)
+        got = solvers._round_lp(inst, xf)
+        if want is None:
+            assert got is None, f"case {k}"
+        else:
+            assert got is not None and np.array_equal(want, got), f"case {k}"
+
+
+def test_local_search_only_improves_on_greedy():
+    for inst in _cases(range(4)):
+        g = solve_greedy(inst)
+        if not np.isfinite(g.cost):
+            continue
+        ls = solvers.local_search(inst, g)
+        assert ls.cost <= g.cost + 1e-9
+        assert is_feasible(inst, ls.assign)
+
+
+# ---------------------------------------------------------------------------
+# LAN (implicit paper-cost) instances
+# ---------------------------------------------------------------------------
+
+def test_lan_instance_matches_dense_paper_instance():
+    for seed in range(4):
+        lan = paper_cost_lan(300, 12, seed=seed, capacity_slack=1.2)
+        dense = paper_cost_instance(300, 12, seed=seed,
+                                    capacity_slack=1.2)
+        d2 = lan.to_dense()
+        assert np.array_equal(d2.c_d, dense.c_d)
+        assert np.array_equal(d2.c_e, dense.c_e)
+        assert np.array_equal(d2.lam, dense.lam)
+        assert np.array_equal(d2.r, dense.r)
+        assert d2.T == dense.T
+
+
+def test_greedy_identical_on_lan_and_dense_form():
+    for seed in range(4):
+        lan = paper_cost_lan(400, 10, seed=seed)
+        a = solve_greedy(lan).assign
+        b = solve_greedy(lan.to_dense()).assign
+        assert np.array_equal(a, b)
+
+
+def test_sub_instance_preserves_costs_and_loads():
+    lan = paper_cost_lan(5000, 40, seed=1)
+    rng = np.random.default_rng(2)
+    dev = np.sort(rng.choice(lan.n, 200, replace=False))
+    edg = np.unique(np.concatenate([np.unique(lan.free[dev]),
+                                    rng.choice(lan.m, 5, replace=False)]))
+    sub = sub_instance(lan, dev, edg)
+    assert sub.n == dev.size and sub.m == edg.size
+    dense = sub.to_dense() if hasattr(sub, "to_dense") else sub
+    full = lan.to_dense()
+    assert np.array_equal(dense.c_d, full.c_d[np.ix_(dev, edg)])
+    assert np.array_equal(dense.lam, full.lam[dev])
+    assert np.array_equal(dense.r, full.r[edg])
+
+
+def test_partition_covers_all_edges_and_devices():
+    for inst in (paper_cost_lan(20_000, 64, seed=0),
+                 random_instance(600, 24, seed=0)):
+        part = partition_instance(inst)
+        assert part.region_of_edge.shape == (inst.m,)
+        assert part.region_of_device.shape == (inst.n,)
+        assert np.all(part.region_of_edge >= 0)
+        assert np.all(part.region_of_device >= 0)
+        assert np.all(part.region_of_edge < part.n_regions)
+        # every device's region is its cheapest edge's region
+        covered = np.zeros(inst.m, bool)
+        for g in range(part.n_regions):
+            covered[part.edges_in(g)] = True
+        assert covered.all()
+
+
+# ---------------------------------------------------------------------------
+# decomposed solver: feasibility, determinism, scale, exact gap
+# ---------------------------------------------------------------------------
+
+def test_decomposed_feasible_and_deterministic_at_scale():
+    inst = paper_cost_lan(100_000, 200, seed=0)
+    sol = solve_decomposed(inst)
+    assert sol.solver == "decomposed"
+    assert inst.is_feasible(sol.assign)
+    assert int(np.sum(sol.assign >= 0)) == inst.T
+    assert {"partition_s", "subsolve_s", "stitch_s",
+            "polish_s"} <= set(sol.meta["phase_s"])
+    again = solve_decomposed(inst)
+    assert np.array_equal(sol.assign, again.assign)
+    assert sol.cost == again.cost
+
+
+def test_decomposed_matches_quality_on_dense_instances():
+    """On small dense instances the decomposed pipeline must be at
+    least as good as plain greedy and feasible."""
+    for seed in range(6):
+        inst = paper_cost_instance(80, 8, seed=seed, capacity_slack=1.2)
+        dec = solve_decomposed(inst)
+        grd = solve_greedy(inst)
+        assert is_feasible(inst, dec.assign)
+        if np.isfinite(grd.cost):
+            assert dec.cost <= grd.cost + 1e-9
+
+
+def test_decomposed_gap_vs_exact_on_subsamples():
+    """The acceptance bound: <=5% optimality gap vs the exact B&B on
+    <=80-device subsamples of a continuum-scale paper instance."""
+    big = paper_cost_lan(50_000, 100, seed=0)
+    for s in range(2):
+        rng = np.random.default_rng(1000 + s)
+        dev = np.sort(rng.choice(big.n, size=60, replace=False))
+        edg = np.unique(np.concatenate([
+            np.unique(big.free[dev]),
+            rng.choice(big.m, size=4, replace=False)]))
+        sub = sub_instance(big, dev, edg)
+        dense = sub.to_dense() if hasattr(sub, "to_dense") else sub
+        exact = solve_bnb(dense)
+        dec = solve_decomposed(sub)
+        assert is_feasible(dense, dec.assign)
+        gap = (dec.cost - exact.cost) / max(exact.cost, 1e-9)
+        assert gap <= 0.05, f"sub_seed {s}: gap {gap:.4f}"
+
+
+def test_decomposed_respects_explicit_region_count():
+    inst = paper_cost_lan(20_000, 64, seed=3)
+    sol = solve_decomposed(inst, regions=4)
+    assert inst.is_feasible(sol.assign)
+    assert sol.meta["regions"] == 4
+
+
+# ---------------------------------------------------------------------------
+# property-based feasibility (skipped when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+def test_decomposed_feasibility_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(0, 10_000),
+               m=st.integers(8, 64),
+               slack=st.floats(1.05, 2.0))
+    @hyp.settings(max_examples=10, deadline=None)
+    def prop(seed, m, slack):
+        inst = paper_cost_lan(10_000, m, seed=seed, capacity_slack=slack)
+        sol = solve_decomposed(inst)
+        assert inst.is_feasible(sol.assign)
+
+    prop()
