@@ -1,13 +1,27 @@
 """Shared benchmark utilities: timing, CSV emission, and a JSON
 results registry so CI can record the perf trajectory as an artifact
-(``benchmarks/run.py --json BENCH_cosim.json``)."""
+(``benchmarks/run.py --json BENCH_cosim.json``).
+
+Rows are backed by the telemetry :class:`~repro.telemetry.Telemetry`
+registry: every ``emit`` lands as ``bench:{name}:{field}`` gauges
+(numbers) / texts (strings) in ``TELEMETRY.metrics``, and
+``write_json`` reconstructs the ``{name: {field: value}}`` payload
+from a registry snapshot — the BENCH_* artifacts are a telemetry
+export rather than a hand-rolled dict, and ``TELEMETRY.to_prometheus``
+gives the same rows in Prometheus text format."""
 from __future__ import annotations
 
 import json
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
-#: every ``emit`` lands here too; ``write_json`` snapshots it.
+from repro.telemetry import Telemetry
+
+#: process-wide benchmark telemetry: every ``emit`` records here, and
+#: ``write_json`` / ``to_prometheus`` export from it.
+TELEMETRY = Telemetry()
+
+#: legacy row view (append order) — kept for callers that iterate rows.
 RESULTS: List[Dict[str, object]] = []
 
 
@@ -42,17 +56,39 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
                               "us_per_call": float(us_per_call)}
     row.update(_derived_fields(derived))
     RESULTS.append(row)
+    m = TELEMETRY.metrics
+    for field, value in row.items():
+        if field == "name":
+            continue
+        key = f"bench:{name}:{field}"
+        if isinstance(value, (int, float)):
+            m.gauge(key).set(float(value))
+        else:
+            m.text(key).set(str(value))
+
+
+def rows_from_registry() -> Dict[str, Dict[str, object]]:
+    """Reconstruct ``{name: {field: value}}`` from the telemetry
+    registry (``bench:{name}:{field}`` keys; benchmark names contain no
+    colons, so ``rsplit(':', 1)`` recovers the field)."""
+    snap = TELEMETRY.metrics.snapshot()
+    payload: Dict[str, Dict[str, object]] = {}
+    for kind in ("gauges", "texts"):
+        for key, value in snap.get(kind, {}).items():
+            if not key.startswith("bench:"):
+                continue
+            name, field = key[len("bench:"):].rsplit(":", 1)
+            payload.setdefault(name, {})[field] = value
+    return payload
 
 
 def write_json(path: str) -> None:
     """Snapshot every emitted benchmark row to ``path`` as
     ``{name: {us_per_call, ...derived fields...}}`` — the perf record
     CI uploads (``requests_per_s`` rows carry the event-engine
-    throughput the soft floor in ``scripts/ci.sh`` checks)."""
-    payload = {}
-    for row in RESULTS:
-        payload[str(row["name"])] = {k: v for k, v in row.items()
-                                     if k != "name"}
+    throughput the soft floor in ``scripts/ci.sh`` checks).  The
+    payload comes out of the telemetry registry, so it is exactly what
+    ``TELEMETRY.to_prometheus()`` exposes under another format."""
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+        json.dump(rows_from_registry(), f, indent=2, sort_keys=True)
         f.write("\n")

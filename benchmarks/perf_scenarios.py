@@ -34,7 +34,9 @@ import sys
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.sim.scenarios import (POLICIES, SCENARIOS, ScenarioResult,
-                                 default_budget_total, run_grid)
+                                 default_budget_total, run_grid,
+                                 run_scenario)
+from repro.telemetry import Telemetry
 
 from benchmarks.common import emit
 
@@ -81,6 +83,30 @@ def run(duration_s: float = 120.0, seed: int = 0,
             print(f"# WARNING: {sc_name} budgeted policy overspent "
                   f"({bd.budget_spent:.1f} > {bd.budget_total:.1f})",
                   file=sys.stderr)
+
+    # one instrumented budgeted cell (serial): surface the decision
+    # audit + ReconfigBudget ledger through the telemetry registry so
+    # the BENCH artifact records spend / deferral / overrun counts
+    sc_audit = scenarios[-1]
+    tel = Telemetry()
+    res = run_scenario(SCENARIOS[sc_audit](), policy="budgeted",
+                       seed=seed, duration_s=duration_s,
+                       budget_total=budget, telemetry=tel)
+    m = tel.metrics
+    audit = tel.audit.counts()
+    emit(f"scenario_{sc_audit}_budgeted_audit", len(tel.audit) * 1.0,
+         f"applied={audit['applied']};forced={audit['forced']};"
+         f"deferred={audit['deferred']};vetoed={audit['vetoed']};"
+         f"noted={audit['noted']};"
+         f"attempts={m.value('reconfig.attempts'):.0f};"
+         f"cost_spent={m.value('reconfig.cost_spent'):.1f};"
+         f"budget_spent={m.value('reconfig.budget_spent'):.1f};"
+         f"overrun={m.value('reconfig.budget_overrun'):.1f};"
+         f"spans={len(tel.tracer.spans)}")
+    if abs(m.value("reconfig.budget_spent") - res.budget_spent) > 1e-9:
+        print(f"# WARNING: registry budget_spent "
+              f"{m.value('reconfig.budget_spent'):.1f} != scenario "
+              f"{res.budget_spent:.1f}", file=sys.stderr)
     return cells
 
 

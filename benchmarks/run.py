@@ -28,7 +28,11 @@ def main() -> None:
                     help="also write every emitted row to PATH as JSON "
                          "(name -> us_per_call + derived fields, incl. "
                          "the event-engine requests/sec) — the perf "
-                         "trajectory artifact CI uploads")
+                         "trajectory artifact CI uploads; rows come out "
+                         "of the benchmark telemetry registry")
+    ap.add_argument("--prom", metavar="PATH", default=None,
+                    help="also write the benchmark telemetry registry "
+                         "as Prometheus text exposition to PATH")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
@@ -54,6 +58,7 @@ def main() -> None:
         fig2_solver_scaling.run_decomposed(sizes=((100_000, 200),),
                                            sub_seeds=2)
         _maybe_write_json(args.json)
+        _maybe_write_prom(args.prom)
         return
 
     print("# --- Fig. 2: HFLOP solver scaling ---", file=sys.stderr)
@@ -127,12 +132,21 @@ def main() -> None:
         print(f"# roofline summary unavailable: {e}", file=sys.stderr)
 
     _maybe_write_json(args.json)
+    _maybe_write_prom(args.prom)
 
 
 def _maybe_write_json(path) -> None:
     if path:
         from benchmarks.common import write_json
         write_json(path)
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+def _maybe_write_prom(path) -> None:
+    if path:
+        from benchmarks.common import TELEMETRY
+        with open(path, "w") as f:
+            f.write(TELEMETRY.to_prometheus())
         print(f"# wrote {path}", file=sys.stderr)
 
 

@@ -39,6 +39,8 @@ from repro.core.hflop import (HFLOPInstance, HFLOPSolution, build_ilp,
 from repro.core.milp import solve_milp
 from repro.core.partition import (AnyInstance, LanHFLOPInstance,
                                   partition_instance, sub_instance)
+from repro.telemetry import (SpanTracer, Telemetry,
+                             maybe as _maybe_tel)
 
 _CHUNK0 = 256                 # speculation chunk start size
 _CHUNK_CELLS = 4_000_000      # cap chunk_rows * m (bounded memory)
@@ -525,7 +527,9 @@ def solve_heuristic(inst: HFLOPInstance) -> HFLOPSolution:
 
 def solve_decomposed(inst: AnyInstance, regions: Optional[int] = None,
                      ls_iters: int = 200, batch_passes: int = 6,
-                     polish_cells: int = 4_000_000) -> HFLOPSolution:
+                     polish_cells: int = 4_000_000,
+                     telemetry: Optional[Telemetry] = None,
+                     ) -> HFLOPSolution:
     """Million-device HFLOP: partition the edge continuum into regions
     (LAN-balanced for structured instances, k-medoids on cost columns
     otherwise), solve each region as an independent dense capacitated
@@ -537,84 +541,94 @@ def solve_decomposed(inst: AnyInstance, regions: Optional[int] = None,
 
     Returns a standard :class:`HFLOPSolution` with per-phase wall times,
     region stats and a cheap lower bound in ``sol.meta``.
+
+    Phases are timed as tracer wall spans (``solve_decomposed.partition``
+    / ``.subsolve`` / ``.stitch`` / ``.polish``): pass ``telemetry`` to
+    collect them alongside everything else it records; without one a
+    throwaway local tracer provides the same timing.  ``meta["phase_s"]``
+    is a thin compatibility view of those spans' durations.
     """
     t0 = time.perf_counter()
     n, m = inst.n, inst.m
     lan = isinstance(inst, LanHFLOPInstance)
-    phases = {}
+    tel = _maybe_tel(telemetry)
+    tr = tel.tracer if tel is not None else SpanTracer()
 
-    t = time.perf_counter()
-    part = partition_instance(inst, regions=regions)
-    phases["partition_s"] = time.perf_counter() - t
+    with tr.wall("solve_decomposed.partition", cat="solver") as sp_part:
+        part = partition_instance(inst, regions=regions)
 
-    t = time.perf_counter()
-    assign = np.full(n, -1, np.int64)
-    for reg in range(part.n_regions):
-        dev = part.devices_in(reg)
-        if dev.size == 0:
-            continue
-        edg = part.edges_in(reg)
-        if edg.size == 0:
-            continue                      # stitch pass will repair these
-        sub = sub_instance(inst, dev, edg)
-        a = _multi_construct(sub)
-        ach = int(np.sum(a >= 0))
-        if ach < sub.T:                   # region can't host everyone:
-            sub = HFLOPInstance(sub.c_d, sub.c_e, sub.lam, sub.r,
-                                l=sub.l, T=ach)
-        a = _polish_dense(sub, a, ls_iters, batch_passes)
-        keep = a >= 0
-        assign[dev[keep]] = edg[a[keep]]
-    phases["subsolve_s"] = time.perf_counter() - t
+    with tr.wall("solve_decomposed.subsolve", cat="solver",
+                 regions=int(part.n_regions)) as sp_sub:
+        assign = np.full(n, -1, np.int64)
+        for reg in range(part.n_regions):
+            dev = part.devices_in(reg)
+            if dev.size == 0:
+                continue
+            edg = part.edges_in(reg)
+            if edg.size == 0:
+                continue                  # stitch pass will repair these
+            sub = sub_instance(inst, dev, edg)
+            a = _multi_construct(sub)
+            ach = int(np.sum(a >= 0))
+            if ach < sub.T:               # region can't host everyone:
+                sub = HFLOPInstance(sub.c_d, sub.c_e, sub.lam, sub.r,
+                                    l=sub.l, T=ach)
+            a = _polish_dense(sub, a, ls_iters, batch_passes)
+            keep = a >= 0
+            assign[dev[keep]] = edg[a[keep]]
 
     # stitch: boundary repair — leftover devices go wherever capacity
     # remains, cheapest (open-cost-amortized) edge first, across regions
-    t = time.perf_counter()
-    ok = assign >= 0
-    load = np.bincount(assign[ok], weights=inst.lam[ok], minlength=m)
-    opened = np.bincount(assign[ok], minlength=m) > 0
-    left = np.nonzero(~ok)[0]
-    repaired = 0
-    if left.size:
-        before = int(ok.sum())
-        order = left[np.argsort(-inst.lam[left])]
-        _greedy_insert(_cost_rows_fn(inst), order, inst.lam, inst.r,
-                       inst.c_e, inst.l, load, opened, assign)
-        repaired = int(np.sum(assign >= 0)) - before
-    surplus = int(np.sum(assign >= 0)) - inst.T
-    if surplus > 0:                       # same trimming rule as greedy
-        local = _local_costs_any(inst, assign)
-        ordt = np.argsort(-local)
-        drop = ordt[:min(surplus, int(np.sum(local > 0)))]
-        np.subtract.at(load, assign[drop], inst.lam[drop])
-        assign[drop] = -1
-    # cross-region merge: regions solve in isolation, so the union can
-    # hold redundant open edges near boundaries — the global close pass
-    # drains and merges them wherever relocation beats the open cost
-    ok = assign >= 0
-    load = np.bincount(assign[ok], weights=inst.lam[ok], minlength=m)
-    opened = np.bincount(assign[ok], minlength=m) > 0
-    _close_edges(_cost_rows_fn(inst), inst.lam, inst.r, inst.c_e, inst.l,
-                 m, assign, load, opened)
-    phases["stitch_s"] = time.perf_counter() - t
+    with tr.wall("solve_decomposed.stitch", cat="solver") as sp_stitch:
+        ok = assign >= 0
+        load = np.bincount(assign[ok], weights=inst.lam[ok], minlength=m)
+        opened = np.bincount(assign[ok], minlength=m) > 0
+        left = np.nonzero(~ok)[0]
+        repaired = 0
+        if left.size:
+            before = int(ok.sum())
+            order = left[np.argsort(-inst.lam[left])]
+            _greedy_insert(_cost_rows_fn(inst), order, inst.lam, inst.r,
+                           inst.c_e, inst.l, load, opened, assign)
+            repaired = int(np.sum(assign >= 0)) - before
+        surplus = int(np.sum(assign >= 0)) - inst.T
+        if surplus > 0:                   # same trimming rule as greedy
+            local = _local_costs_any(inst, assign)
+            ordt = np.argsort(-local)
+            drop = ordt[:min(surplus, int(np.sum(local > 0)))]
+            np.subtract.at(load, assign[drop], inst.lam[drop])
+            assign[drop] = -1
+        # cross-region merge: regions solve in isolation, so the union
+        # can hold redundant open edges near boundaries — the global
+        # close pass drains and merges them wherever relocation beats
+        # the open cost
+        ok = assign >= 0
+        load = np.bincount(assign[ok], weights=inst.lam[ok], minlength=m)
+        opened = np.bincount(assign[ok], minlength=m) > 0
+        _close_edges(_cost_rows_fn(inst), inst.lam, inst.r, inst.c_e,
+                     inst.l, m, assign, load, opened)
 
-    t = time.perf_counter()
-    if n * m <= polish_cells:
-        dense = inst.to_dense() if lan else inst
-        assign = _polish_dense(dense, assign.copy(), ls_iters, batch_passes)
-        # small instances afford a second basin: a *global* construction
-        # polished the same way; keep whichever places more devices at
-        # lower cost (guards the optimality gap where a region split is
-        # the wrong structure)
-        alt = _polish_dense(dense, _multi_construct(dense),
-                            ls_iters, batch_passes)
-        if ((int(np.sum(alt >= 0)), -objective(dense, alt))
-                > (int(np.sum(assign >= 0)), -objective(dense, assign))):
-            assign = alt
-    elif lan:
-        assign = _lan_reclaim(inst, assign)
-    phases["polish_s"] = time.perf_counter() - t
+    with tr.wall("solve_decomposed.polish", cat="solver") as sp_polish:
+        if n * m <= polish_cells:
+            dense = inst.to_dense() if lan else inst
+            assign = _polish_dense(dense, assign.copy(), ls_iters,
+                                   batch_passes)
+            # small instances afford a second basin: a *global*
+            # construction polished the same way; keep whichever places
+            # more devices at lower cost (guards the optimality gap
+            # where a region split is the wrong structure)
+            alt = _polish_dense(dense, _multi_construct(dense),
+                                ls_iters, batch_passes)
+            if ((int(np.sum(alt >= 0)), -objective(dense, alt))
+                    > (int(np.sum(assign >= 0)),
+                       -objective(dense, assign))):
+                assign = alt
+        elif lan:
+            assign = _lan_reclaim(inst, assign)
 
+    # thin compatibility view of the tracer spans (one source of truth)
+    phases = {"partition_s": sp_part.dur, "subsolve_s": sp_sub.dur,
+              "stitch_s": sp_stitch.dur, "polish_s": sp_polish.dur}
     feasible = int(np.sum(assign >= 0)) >= inst.T
     cost = _objective_any(inst, assign) if feasible else np.inf
     lb = _lower_bound(inst)

@@ -46,10 +46,12 @@ from repro.sim.request_plane import (RULE_CODE, RULES, TIER_CLOUD,
                                      TIER_DEVICE, TIER_EDGE, ColumnarLog,
                                      batched_rtt_draws, bucket_admissions,
                                      occupancy_replay)
+from repro.telemetry import Telemetry, maybe as _maybe_tel
 
 ENGINES = ("batched", "heap")
 
 _RULE_NAMES = np.array(RULES, dtype=object)   # code -> str, C-speed take
+_TIER_NAMES = ("device", "edge", "cloud")     # TIER_* code -> str
 
 #: above this many open edges the per-window edge grouping switches
 #: from one boolean scan per edge to a single stable argsort — scans
@@ -238,7 +240,8 @@ class RequestProcessor:
                      [str, np.ndarray], np.ndarray]] = None,
                  extra_ms_vec_fn: Optional[Callable[
                      [np.ndarray, np.ndarray, np.ndarray, np.ndarray],
-                     np.ndarray]] = None):
+                     np.ndarray]] = None,
+                 telemetry: Optional[Telemetry] = None):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; pick from "
                              f"{ENGINES}")
@@ -269,6 +272,20 @@ class RequestProcessor:
         self.busy_mask_fn = busy_mask_fn
         self.stretch_fn = stretch_fn
         self.extra_ms_vec_fn = extra_ms_vec_fn
+        # resolved once: None unless telemetry is present AND enabled,
+        # so disabled runs pay exactly one is-None branch per window;
+        # instrument handles are bound here too — the window path does
+        # no registry lookups or name formatting
+        self._tel = _maybe_tel(telemetry)
+        if self._tel is not None:
+            m = self._tel.metrics
+            self._m_windows = m.counter("request_plane.windows")
+            self._m_total = m.counter("requests.total")
+            self._m_tier = [m.counter(f"requests.tier.{t}")
+                            for t in _TIER_NAMES]
+            self._m_rule = [m.counter(f"requests.rule.{r}")
+                            for r in RULES]
+            self._m_hist = m.histogram("request.latency_ms")
         self._cols = ColumnarLog()
         self._tier_code = {"device": TIER_DEVICE, "edge": TIER_EDGE,
                            "cloud": TIER_CLOUD}
@@ -342,8 +359,11 @@ class RequestProcessor:
             net = float(self.lat.rtt("device", self.rng))
         if self.extra_ms_fn is not None:
             net += float(self.extra_ms_fn(dec, t, i))
-        self._cols.append(t, i, self._tier_code[dec.tier],
-                          RULE_CODE[dec.rule], net + service)
+        tier_code = self._tier_code[dec.tier]
+        rule_code = RULE_CODE[dec.rule]
+        self._cols.append(t, i, tier_code, rule_code, net + service)
+        if self._tel is not None:
+            self._record_scalar(tier_code, rule_code, net + service)
 
     # -- batched engine ------------------------------------------------------
 
@@ -443,7 +463,10 @@ class RequestProcessor:
         net = batched_rtt_draws(self.rng, self.lat, tier, two_hop)
         if self.extra_ms_vec_fn is not None:
             net = net + self.extra_ms_vec_fn(t, dev, tier, edge_id)
-        self._cols.extend(t, dev, tier, rule, net + service)
+        lat_ms = net + service
+        self._cols.extend(t, dev, tier, rule, lat_ms)
+        if self._tel is not None:
+            self._record_window(tier, rule, lat_ms)
 
     def _edge_groups(self, eb: np.ndarray, j: np.ndarray):
         """Window positions grouped by edge (arrival order within each
@@ -500,6 +523,44 @@ class RequestProcessor:
         st.in_service = int(pend.size)
 
     # -- shared telemetry / log ---------------------------------------------
+
+    def _record_window(self, tier: np.ndarray, rule: np.ndarray,
+                       lat_ms: np.ndarray) -> None:
+        """Bulk columnar recording: per-code ``count_nonzero`` passes
+        (int8 compares — cheaper than bincount at these cardinalities)
+        and one histogram merge per window, never a per-request Python
+        call — what keeps enabled-mode overhead on the batched plane
+        inside the CI gate.  Metric names match :meth:`_record_scalar`
+        so both engines produce identical counter values for identical
+        runs."""
+        self._m_windows.value += 1.0
+        n = tier.size
+        if n == 0:
+            return
+        self._m_total.value += n
+        left = n
+        for k, c in enumerate(self._m_tier):
+            if left == 0:
+                break
+            tc = int(np.count_nonzero(tier == k)) if k < 2 else left
+            c.value += tc
+            left -= tc
+        left = n
+        for k, c in enumerate(self._m_rule):
+            if left == 0:
+                break
+            rc = (int(np.count_nonzero(rule == k))
+                  if k < len(self._m_rule) - 1 else left)
+            c.value += rc
+            left -= rc
+        self._m_hist.observe_array(lat_ms)
+
+    def _record_scalar(self, tier_code: int, rule_code: int,
+                       latency_ms: float) -> None:
+        self._m_total.value += 1.0
+        self._m_tier[tier_code].value += 1.0
+        self._m_rule[rule_code].value += 1.0
+        self._m_hist.observe(latency_ms)
 
     def recent_percentile(self, now: float, window_s: float, p: float,
                           min_requests: int = 1,

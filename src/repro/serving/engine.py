@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import make_model
+from repro.telemetry import Telemetry, maybe as _maybe_tel
 
 
 def bucket_len(n: int, lo: int = 8) -> int:
@@ -53,8 +54,10 @@ class EngineMeasurement:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: Any,
-                 batch_size: int, max_len: Optional[int] = None):
+                 batch_size: int, max_len: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
+        self._tel = _maybe_tel(telemetry)
         self.api = make_model(cfg)
         self.params = params
         self.batch_size = batch_size
@@ -128,6 +131,15 @@ class ServeEngine:
     def admit(self, prompt, slot: int) -> int:
         """Prefill ``prompt`` (S,) into ``slot``.  Returns the first
         generated (greedy) token."""
+        if self._tel is not None:
+            with self._tel.tracer.wall("serve.admit", cat="serving",
+                                       slot=int(slot)):
+                first = self._admit_impl(prompt, slot)
+            self._tel.metrics.counter("serve.admissions").inc()
+            return first
+        return self._admit_impl(prompt, slot)
+
+    def _admit_impl(self, prompt, slot: int) -> int:
         prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
         S = prompt.shape[1]
         if S > self.max_len:
@@ -148,6 +160,8 @@ class ServeEngine:
         next admission — no device work."""
         if slot not in self.free_slots:
             self.free_slots.append(slot)
+            if self._tel is not None:
+                self._tel.metrics.counter("serve.evictions").inc()
 
     @property
     def active_slots(self) -> int:
@@ -163,6 +177,8 @@ class ServeEngine:
                                         self.pos, self.cache)
         self.pos = self.pos + 1
         self.next_tok = toks[:, :, None]
+        if self._tel is not None:
+            self._tel.metrics.counter("serve.decode_steps").inc()
         return np.asarray(toks[:, 0])
 
     # -- convenience generation paths --------------------------------------
@@ -223,6 +239,15 @@ class ServeEngine:
         positions, pending tokens) is snapshotted before and restored
         after, so in-flight sequences resume exactly where they were —
         the measurement decodes never reach them."""
+        if self._tel is not None:
+            with self._tel.tracer.wall("serve.measure", cat="serving",
+                                       prompt_len=int(prompt_len),
+                                       decode_steps=int(decode_steps)):
+                return self._measure_impl(prompt_len, decode_steps, seed)
+        return self._measure_impl(prompt_len, decode_steps, seed)
+
+    def _measure_impl(self, prompt_len: int, decode_steps: int,
+                      seed: int) -> EngineMeasurement:
         saved = (self.cache, self.pos, self.next_tok,
                  list(self.free_slots))
         rng = np.random.default_rng(seed)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List
+from typing import Callable, List, Optional
 
 
 @dataclass(frozen=True)
@@ -45,6 +45,12 @@ class ReconfigBudget:
     total: float = math.inf
     spent: float = 0.0
     ledger: List[BudgetEntry] = field(default_factory=list)
+    #: optional per-charge callback (e.g. CoSim mirrors the ledger into
+    #: telemetry registry metrics); pure observation — called after the
+    #: entry is recorded, must not mutate the budget.  Excluded from
+    #: equality/repr so budgets stay comparable.
+    observer: Optional[Callable[[BudgetEntry], None]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def remaining(self) -> float:
@@ -60,11 +66,14 @@ class ReconfigBudget:
         Forced charges may drive ``spent`` past ``total`` — the overrun
         stays visible in the ledger."""
         ok = forced or self.can_afford(cost)
-        self.ledger.append(BudgetEntry(t=float(t), reason=str(reason),
-                                       cost=float(cost), applied=ok,
-                                       forced=bool(forced)))
+        entry = BudgetEntry(t=float(t), reason=str(reason),
+                            cost=float(cost), applied=ok,
+                            forced=bool(forced))
+        self.ledger.append(entry)
         if ok:
             self.spent += float(cost)
+        if self.observer is not None:
+            self.observer(entry)
         return ok
 
     @property

@@ -50,9 +50,11 @@ from repro.routing.rules import EdgeState, RouteDecision
 from repro.routing.simulator import RequestLog, RequestProcessor
 from repro.serving.workload import poisson_request_arrays
 from repro.sim.budget import ReconfigBudget
+from repro.sim.budget import BudgetEntry
 from repro.sim.events import Event, EventKind, Simulation
 from repro.sim.interference import InterferenceConfig, InterferenceModel
 from repro.sim.request_plane import TIER_DEVICE
+from repro.telemetry import Telemetry, maybe as _maybe_tel
 
 # interference-demand source-name prefixes for load that is *external*
 # to the training pipeline — it survives the edge-tier rebuild on a
@@ -81,6 +83,10 @@ class CoSimConfig:
     #                                  effect-free control events (trace-
     #                                  equivalent; False = flush at every
     #                                  control event, the pre-fusion path)
+    telemetry: Optional[Telemetry] = None  # metrics/spans/audit sink;
+    #                                  pure observation — event ordering,
+    #                                  RNG streams, logs and fingerprints
+    #                                  are bit-identical with or without
 
 
 @dataclass
@@ -110,6 +116,7 @@ class CoSim:
         self.sim = Simulation(record_trace=cfg.record_trace,
                               fuse_windows=cfg.fuse_windows)
         self.sim.flush_gate = self._flush_gate
+        self.tel = _maybe_tel(cfg.telemetry)
         self.rng = np.random.default_rng(cfg.seed)
         n = topo.n_devices
         # per-device epoch-time multiplier in [1-spread, 1]: every device
@@ -123,7 +130,8 @@ class CoSim:
             engine=cfg.engine,
             busy_mask_fn=self._busy_mask,
             stretch_fn=self.interference.stretch_array,
-            extra_ms_vec_fn=self._request_penalty_vec)
+            extra_ms_vec_fn=self._request_penalty_vec,
+            telemetry=cfg.telemetry)
         self.proc.bind(self.sim)
 
         self._busy_count = np.zeros(n, dtype=int)
@@ -159,6 +167,14 @@ class CoSim:
         self.tenant_log: List[Tuple[float, int, str, float]] = []
         self.reactive = reactive
         self.budget = budget
+        if budget is not None and self.tel is not None:
+            # mirror the budget ledger into registry metrics: every
+            # charge/veto updates the spend counters and gauges below
+            m = self.tel.metrics
+            m.gauge("reconfig.budget_total").set(budget.total)
+            m.gauge("reconfig.budget_spent").set(budget.spent)
+            m.gauge("reconfig.budget_overrun").set(0.0)
+            budget.observer = self._on_budget_charge
 
         s = self.sim
         s.on(EventKind.ROUND_START, self._on_round_start)
@@ -173,6 +189,12 @@ class CoSim:
         s.on(EventKind.STRAGGLER, self._on_straggler)
         s.on(EventKind.DEVICE_MOVE, self._on_device_move)
         s.on(EventKind.TENANT_LOAD, self._on_tenant_load)
+        if self.tel is not None:
+            # observation-only handler: DRIFT_ONSET otherwise has no
+            # CoSim handler (the reactive loop registers its own).
+            # Handlers never affect the trace or flush decisions, so
+            # registering one conditionally preserves determinism.
+            s.on(EventKind.DRIFT_ONSET, self._on_drift_telemetry)
 
         arr_t, arr_dev = poisson_request_arrays(
             topo.lam * cfg.rate_scale, cfg.duration_s, self.rng)
@@ -280,6 +302,13 @@ class CoSim:
             left[i] = w.local_epochs
         self._epochs_left[(sid, w.index)] = left
         self._epoch_sched[(sid, w.index)] = (w, per_dev)
+        if self.tel is not None:
+            self.tel.tracer.open(
+                ("round", sid, w.index), f"round {w.index}", ev.t,
+                cat="round", tid=sid, sid=sid,
+                local_epochs=w.local_epochs, is_global=bool(w.is_global),
+                participants=int(participants.size))
+            self.tel.metrics.counter("training.rounds_started").inc()
 
     def _on_epoch_start(self, sim: Simulation, ev: Event) -> None:
         sid, w, tok = ev.payload
@@ -289,6 +318,12 @@ class CoSim:
         self._busy_count[i] += 1
         self.interference.set_demand(("device", i), "epoch",
                                      self.cfg.interference.device_train_share)
+        if self.tel is not None:
+            # one track per device (offset past the round/agg tracks);
+            # cancelled tokens returned above, so only real epochs span
+            self.tel.tracer.open(("epoch", tok), f"epoch d{i}", ev.t,
+                                 cat="epoch", tid=100 + i, device=i,
+                                 round=w.index, sid=sid)
 
     def _on_epoch_end(self, sim: Simulation, ev: Event) -> None:
         sid, w, tok = ev.payload
@@ -296,6 +331,9 @@ class CoSim:
             return
         i = ev.node
         self._busy_count[i] -= 1
+        if self.tel is not None:
+            self.tel.tracer.close(("epoch", tok), ev.t)
+            self.tel.metrics.counter("training.epochs_completed").inc()
         left = self._epochs_left.get((sid, w.index))
         if left is None:             # straggler epoch outlived its round
             if self._busy_count[i] == 0:
@@ -323,6 +361,10 @@ class CoSim:
                                          f"agg{sid}:{w.index}",
                                          self.cfg.interference.
                                          cloud_agg_share)
+        if self.tel is not None:
+            self.tel.tracer.open(("agg", sid, w.index), f"agg {w.index}",
+                                 ev.t, cat="aggregation", tid=sid,
+                                 sid=sid, is_global=bool(w.is_global))
 
     def _on_agg_end(self, sim: Simulation, ev: Event) -> None:
         sid, w = ev.payload
@@ -331,6 +373,9 @@ class CoSim:
         for j in self.proc.edges:
             self.interference.set_demand(("edge", j), src, 0.0)
         self.interference.set_demand(("cloud", 0), src, 0.0)
+        if self.tel is not None:
+            self.tel.tracer.close(("agg", sid, w.index), ev.t)
+            self.tel.metrics.counter("training.aggs_completed").inc()
 
     def _on_round_end(self, sim: Simulation, ev: Event) -> None:
         sid, w = ev.payload
@@ -342,6 +387,9 @@ class CoSim:
         self._epoch_sched.pop((sid, w.index), None)
         self.rounds_completed += 1
         self.last_round_end = sim.now
+        if self.tel is not None:
+            self.tel.tracer.close(("round", sid, w.index), ev.t)
+            self.tel.metrics.counter("training.rounds_completed").inc()
 
     def resolve_edge(self, edge_id: int) -> Optional[int]:
         """Current topology id of an edge named by its injection-time
@@ -361,6 +409,10 @@ class CoSim:
         cur = self.resolve_edge(ev.node)
         if cur is not None:
             self.proc.fail_edge(cur)
+        if self.tel is not None:
+            self.tel.tracer.instant("node_failure", ev.t, cat="fault",
+                                    edge=ev.node, resolved_edge=cur)
+            self.tel.metrics.counter("events.node_failure").inc()
 
     def _on_capacity_change(self, sim: Simulation, ev: Event) -> None:
         """Apply the new rate to the edge's admission state even without
@@ -371,6 +423,11 @@ class CoSim:
         if st is not None:
             st.capacity_rps = float(ev.payload)
             st.tokens = min(st.tokens, st.capacity_rps * st.burst_s)
+        if self.tel is not None:
+            self.tel.tracer.instant("capacity_change", ev.t, cat="fault",
+                                    edge=ev.node,
+                                    new_rps=float(ev.payload))
+            self.tel.metrics.counter("events.capacity_change").inc()
 
     # -- scenario events: stragglers, mobility, multi-tenant edges ----------
 
@@ -406,6 +463,11 @@ class CoSim:
             per_dev[i] = kept
             info.append((sid, w, kept[-1][1]))
         self._straggler_info[i] = info
+        if self.tel is not None:
+            self.tel.tracer.instant("straggler", t, cat="fault",
+                                    device=i, factor=factor,
+                                    rounds_affected=len(info))
+            self.tel.metrics.counter("events.straggler").inc()
 
     def straggler_info(self, device_id: int,
                        ) -> List[Tuple[int, RoundWindow, float]]:
@@ -473,6 +535,11 @@ class CoSim:
             sim.schedule(t + self.cfg.handover_s, EventKind.TENANT_LOAD,
                          node=j_raw, payload=(src, 0.0))
         self.move_log.append((t, i, j_old, j_new))
+        if self.tel is not None:
+            self.tel.tracer.instant("device_move", t, cat="mobility",
+                                    device=i, old_edge=j_old,
+                                    new_edge=j_new)
+            self.tel.metrics.counter("events.device_move").inc()
 
     def _on_tenant_load(self, sim: Simulation, ev: Event) -> None:
         """External edge demand change: a third-party tenant job starts
@@ -491,6 +558,32 @@ class CoSim:
             return
         self.interference.set_demand(("edge", j), src, float(share))
         self.tenant_log.append((ev.t, j, src, float(share)))
+        if self.tel is not None:
+            self.tel.metrics.counter("events.tenant_load").inc()
+
+    def _on_drift_telemetry(self, sim: Simulation, ev: Event) -> None:
+        self.tel.tracer.instant("drift_onset", ev.t, cat="fault",
+                                drift_mse=ev.payload)
+        self.tel.metrics.counter("events.drift_onset").inc()
+
+    def _on_budget_charge(self, entry: BudgetEntry) -> None:
+        """ReconfigBudget observer: mirror every ledger entry into the
+        registry (spend/deferral counters + running budget gauges) so
+        grid cells report budget accounting as metrics, not only as
+        scenario-result fields."""
+        m = self.tel.metrics
+        m.counter("reconfig.attempts").inc()
+        if entry.applied:
+            m.counter("reconfig.applied").inc()
+            m.counter("reconfig.cost_spent").inc(entry.cost)
+        else:
+            m.counter("reconfig.deferred").inc()
+        if entry.forced:
+            m.counter("reconfig.forced").inc()
+        b = self.budget
+        m.gauge("reconfig.budget_spent").set(b.spent)
+        m.gauge("reconfig.budget_remaining").set(b.remaining)
+        m.gauge("reconfig.budget_overrun").set(max(b.spent - b.total, 0.0))
 
     # -- reactive-deployment plumbing ---------------------------------------
 
@@ -519,10 +612,23 @@ class CoSim:
 
         When a :class:`ReconfigBudget` is attached, the swap is metered
         first — an unaffordable, non-``forced`` swap is vetoed (returns
-        False, the deployment does NOT go live)."""
+        False, the deployment does NOT go live).
+
+        With telemetry attached, every attempt lands in the decision
+        audit log: trigger (the ``reason`` string the reactive loop
+        passes), modeled migration cost, whether the budget was
+        charged, and applied / forced (overrun) / vetoed outcome."""
         t = self.sim.now
+        cost = self.reconfig_cost(deployment)
+        affordable = self.budget is None or self.budget.can_afford(cost)
         if self.budget is not None and not self.budget.charge(
-                t, self.reconfig_cost(deployment), reason, forced=forced):
+                t, cost, reason, forced=forced):
+            if self.tel is not None:
+                self.tel.audit.record(
+                    t, "deployment_swap", trigger=reason,
+                    outcome="vetoed", cost=cost, charged=False,
+                    evidence={"budget_remaining": self.budget.remaining,
+                              "budget_total": self.budget.total})
             return False
         self.proc.set_topology(deployment.topology)
         # training demands were keyed by old edge ids: rebuild the edge
@@ -542,6 +648,20 @@ class CoSim:
         self.reconfig_until = t + self.cfg.reconfig_s
         self.reconfig_times.append(t)
         self.sim.schedule(self.reconfig_until, EventKind.RECONFIG_END)
+        if self.tel is not None:
+            evidence = {"n_edges": len(self.proc.topo.open_edges)}
+            if self.budget is not None:
+                evidence["budget_remaining"] = self.budget.remaining
+            self.tel.audit.record(
+                t, "deployment_swap", trigger=reason,
+                outcome=("applied" if affordable else "forced"),
+                cost=cost, charged=self.budget is not None,
+                forced=forced, evidence=evidence)
+            # migration window has a known duration — record it whole
+            self.tel.tracer.complete(
+                "deployment swap", t, self.cfg.reconfig_s,
+                cat="reconfig", tid=50, trigger=reason, cost=cost)
+            self.tel.metrics.counter("reconfig.swaps").inc()
         return True
 
     def _on_reconfig_end(self, sim: Simulation, ev: Event) -> None:
@@ -611,6 +731,11 @@ class CoSim:
 
     def run(self) -> CoSimResult:
         self.sim.run(until=self.cfg.duration_s)
+        if self.tel is not None:
+            m = self.tel.metrics
+            m.gauge("sim.duration_s").set(self.sim.now)
+            m.gauge("sim.fused_windows").set(self.sim.fused_windows)
+            m.gauge("sim.rounds_completed").set(self.rounds_completed)
         mse = (np.asarray(self.reactive.mse_series)
                if self.reactive is not None and self.reactive.mse_series
                else np.zeros((0, 2)))

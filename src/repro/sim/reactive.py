@@ -136,9 +136,14 @@ class ReactiveLoop:
         # inventory while the budget defers the re-deploy.
         self._edge_to_inv: Dict[int, int] = {}
         self.cosim = None
+        self.tel = None
 
     def bind(self, cosim) -> None:
         self.cosim = cosim
+        # already resolved by the co-sim: None unless enabled.  The
+        # audit log is additive observation — `actions` strings and the
+        # budget ledger are byte-identical with telemetry on or off.
+        self.tel = cosim.tel
         self._edge_to_inv = {j: j for j in
                              range(len(self.controller.inventory.edges))}
         sim: Simulation = cosim.sim
@@ -187,6 +192,12 @@ class ReactiveLoop:
         if budget.can_afford(cost):
             return True
         budget.charge(t, cost, reason, forced=False)   # records the veto
+        if self.tel is not None:
+            self.tel.audit.record(
+                t, "deployment_swap", trigger=reason, outcome="deferred",
+                cost=cost, charged=False,
+                evidence={"budget_remaining": budget.remaining,
+                          "budget_total": budget.total})
         self.actions.append(
             (t, f"{reason} deferred: reconfig budget exhausted "
              f"({budget.summary()})"))
@@ -217,6 +228,12 @@ class ReactiveLoop:
     def on_drift(self, sim: Simulation, ev: Event) -> None:
         self.acc.on_drift(ev.t, drift_mse=ev.payload)
         self.actions.append((ev.t, "drift onset"))
+        if self.tel is not None:
+            self.tel.audit.record(
+                ev.t, "drift_alarm", trigger="drift_onset",
+                outcome="noted",
+                evidence={"drift_mse": self.acc.drift_mse,
+                          "base_mse": self.acc.base_mse})
 
     def on_round_end(self, sim: Simulation, ev: Event) -> None:
         sid, w = ev.payload
@@ -252,6 +269,13 @@ class ReactiveLoop:
             budget.charge(ev.t, fail_cost,
                           f"failure recluster (edge {failed})",
                           forced=False)
+            if self.tel is not None:
+                self.tel.audit.record(
+                    ev.t, "deployment_swap",
+                    trigger=f"failure recluster (edge {failed})",
+                    outcome="deferred", cost=fail_cost, charged=False,
+                    evidence={"failed_edge": failed,
+                              "budget_remaining": budget.remaining})
             self.controller.on_node_failure(inv_idx, redeploy=False)
             self._edge_to_inv = {
                 tj: s for tj, y in self._edge_to_inv.items()
@@ -337,6 +361,14 @@ class ReactiveLoop:
                          f"{w.index} at t={projected_end:.1f}s > deadline "
                          f"{w.upload_end:.1f}s -> dropped ({dropped} "
                          "epochs cancelled, partial aggregation)"))
+                    if self.tel is not None:
+                        self.tel.audit.record(
+                            ev.t, "straggler_drop",
+                            trigger="deadline_miss", outcome="applied",
+                            evidence={"device": i, "round": w.index,
+                                      "epochs_dropped": dropped,
+                                      "projected_end_s": projected_end,
+                                      "deadline_s": w.upload_end})
         if rounds_dropped:
             self._note_drops(ev.t, i, rounds_dropped)
 
@@ -357,6 +389,12 @@ class ReactiveLoop:
                 or not devices[i].reliable):
             return
         reason = f"unreliable recluster (device {i})"
+        if self.tel is not None:
+            self.tel.audit.record(
+                t, "unreliable_mark", trigger="deadline_drops",
+                outcome="noted",
+                evidence={"device": i, "drops": self._drop_counts[i],
+                          "threshold": thresh})
         if (t - self.last_recluster_t < self.policy.cooldown_s
                 or not self._budget_allows(t, reason)):
             self.controller.on_unreliable_devices([i], redeploy=False)
@@ -427,6 +465,14 @@ class ReactiveLoop:
         self.burst_until = burst[-1].end
         self.actions.append((t, f"accuracy alarm (mse={mse:.3f}) -> "
                              f"retraining burst of {p.burst_rounds} rounds"))
+        if self.tel is not None:
+            self.tel.audit.record(
+                t, "retraining_burst", trigger="drift_alarm",
+                outcome="applied",
+                evidence={"mse": mse, "rounds": p.burst_rounds,
+                          "local_epochs": p.burst_local_epochs,
+                          "burst_until_s": self.burst_until})
+            self.tel.metrics.counter("alarms.accuracy").inc()
 
     def _window_p95(self, t: float) -> Optional[float]:
         # incremental over the columnar log: each tick binary-searches
@@ -440,6 +486,14 @@ class ReactiveLoop:
         """Pick the busiest edge in the window and report its effective
         (training-degraded) capacity to the controller, which re-solves
         HFLOP — load moves off the bottleneck."""
+        if self.tel is not None:
+            self.tel.audit.record(
+                t, "latency_alarm", trigger="windowed_p95_breach",
+                outcome="noted",
+                evidence={"p95_ms": p95,
+                          "threshold_ms": self.policy.p95_threshold_ms,
+                          "window_s": self.policy.window_s})
+            self.tel.metrics.counter("alarms.latency").inc()
         proc = self.cosim.proc
         edges = proc.edges
         if not edges:

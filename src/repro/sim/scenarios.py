@@ -284,6 +284,7 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
                  fuse_windows: bool = True,
                  topology: Optional[Tuple[ClusterTopology, np.ndarray,
                                           np.ndarray, np.ndarray]] = None,
+                 telemetry=None,
                  ) -> ScenarioResult:
     """One (scenario, policy, seed) cell of the grid.  ``engine``
     picks the request plane ("batched", default) or the per-request
@@ -296,7 +297,10 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
     ``topology`` substitutes a pre-built continuum — e.g.
     :func:`continuum_topology`'s solver-produced deployment — for the
     default hot-zone draw (``n``/``m``/``hot``/``slack`` are then
-    ignored)."""
+    ignored); ``telemetry`` attaches a ``repro.telemetry.Telemetry``
+    sink (metrics / control-plane spans / decision audit) — pure
+    observation, the result and its fingerprints are bit-identical
+    with or without it."""
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
     topo, loc, lam, r = (topology if topology is not None
@@ -304,7 +308,8 @@ def run_scenario(scenario: Scenario, policy: str = "reactive",
                                                 hot=hot, slack=slack))
     cfg_kwargs = {} if latency is None else {"latency": latency}
     cfg = CoSimConfig(duration_s=duration_s, seed=seed, engine=engine,
-                      fuse_windows=fuse_windows, **cfg_kwargs)
+                      fuse_windows=fuse_windows, telemetry=telemetry,
+                      **cfg_kwargs)
     sched = continual_training(duration_s, l=topo.l) if training else None
 
     reactive, budget, ctl = None, None, None

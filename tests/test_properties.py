@@ -119,3 +119,31 @@ def test_occupancy_replay_boundary_property(slots, base_ms, load, seed,
         heapq.heappush(heap, tk + s / 1000.0)
     assert np.array_equal(got_s, svc)
     assert np.array_equal(got_p, np.sort(np.asarray(heap)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.0, 1e4, allow_nan=False), min_size=0,
+                max_size=200),
+       st.integers(1, 5))                    # number of bulk chunks
+def test_histogram_bulk_equals_scalar(vals, chunks):
+    """Bulk columnar recording (``observe_array``) must be exactly
+    equivalent to scalar ``observe`` per element: identical bucket
+    counts / count / min / max (integer arithmetic and the same
+    ``searchsorted`` semantics), and the float ``sum`` equal up to
+    add-order rounding."""
+    from repro.telemetry import MetricsRegistry
+
+    bulk = MetricsRegistry().histogram("h")
+    scalar = MetricsRegistry().histogram("h")
+    arr = np.asarray(vals, np.float64)
+    for part in np.array_split(arr, chunks):
+        bulk.observe_array(part)
+    for v in arr:
+        scalar.observe(v)
+    assert np.array_equal(bulk.counts, scalar.counts)
+    assert bulk.count == scalar.count == arr.size
+    if arr.size:
+        assert bulk.min == scalar.min and bulk.max == scalar.max
+        np.testing.assert_allclose(bulk.sum, scalar.sum, rtol=1e-12)
+        assert bulk.quantile(95) == pytest.approx(scalar.quantile(95))
+    assert bulk.snapshot()["buckets"] == scalar.snapshot()["buckets"]
