@@ -5,7 +5,6 @@ request rates — speedup barely matters because network dominates;
 the cloud is fast enough (paper: crossover at speedup > 14.25%)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import solve_heuristic
 from repro.routing import LatencyModel, SimConfig, compare_methods

@@ -17,7 +17,6 @@ import dataclasses
 import json
 import os
 
-import jax
 
 import repro.launch.dryrun  # noqa: F401  (512-device flag)
 from repro.configs import INPUT_SHAPES, get_config

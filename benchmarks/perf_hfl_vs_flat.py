@@ -25,7 +25,6 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 import repro.launch.dryrun  # noqa: F401  (sets the 512-device XLA flag)
 from repro.configs import INPUT_SHAPES, get_config

@@ -16,7 +16,6 @@ import argparse
 import json
 import os
 
-import jax
 
 import repro.launch.dryrun  # noqa: F401
 from repro.configs import INPUT_SHAPES, get_config

@@ -4,7 +4,6 @@ deployment adapts while staying feasible.
 
   PYTHONPATH=src python examples/orchestrate_dynamic.py
 """
-import numpy as np
 
 from repro.core import is_feasible
 from repro.orchestration import LearningController, random_inventory

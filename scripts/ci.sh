@@ -6,6 +6,21 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# contract gate (hard): AST-checked invariants — import layering,
+# determinism, telemetry non-perturbation, EVENT_EFFECTS completeness
+# (rules + sanctioned suppression sites documented in CONTRACTS.md)
+mkdir -p results
+python -m repro.analysis --json results/contracts.json
+
+# lint (hard when ruff is available; the container image may not ship
+# it — config lives in pyproject.toml [tool.ruff])
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples
+else
+    echo "ruff not installed; skipping lint (config in pyproject.toml)"
+fi
+
 python -m pytest -x -q "$@"
 
 # fast co-sim smoke: exercises the event core, interference model,

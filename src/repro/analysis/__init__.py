@@ -1,0 +1,23 @@
+"""Contract checker: AST-based invariant linter for this repo.
+
+Run ``python -m repro.analysis`` (CI does, as a hard gate).  The rules
+and the invariants behind them are documented in CONTRACTS.md at the
+repo root; suppress a sanctioned violation inline with
+``# contract: ok RULE001`` and document the site there.
+"""
+from repro.analysis.core import (AnalysisResult, AstCache, FileContext,
+                                 Finding, Project, Rule, default_rules,
+                                 run_analysis)
+from repro.analysis.determinism import GlobalRngRule, WallClockRule
+from repro.analysis.events_rules import EventEffectsRule
+from repro.analysis.imports import JaxFreeImportRule, LazyFacadeRule
+from repro.analysis.telemetry_rules import (NonPerturbationRule,
+                                            TelemetryBindOnceRule)
+
+__all__ = [
+    "AnalysisResult", "AstCache", "FileContext", "Finding", "Project",
+    "Rule", "default_rules", "run_analysis",
+    "JaxFreeImportRule", "LazyFacadeRule", "GlobalRngRule",
+    "WallClockRule", "NonPerturbationRule", "TelemetryBindOnceRule",
+    "EventEffectsRule",
+]

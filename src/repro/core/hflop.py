@@ -18,7 +18,7 @@ small/medium instances plus greedy + local-search heuristics for scale.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

@@ -10,11 +10,12 @@ industrial scale — large instances are handled by the heuristics in
 from __future__ import annotations
 
 import heapq
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+from repro.telemetry.tracer import wall_clock
 
 _EPS = 1e-9
 
@@ -182,7 +183,7 @@ def solve_milp(c: np.ndarray, A: np.ndarray, b: np.ndarray,
     ``rounding(x_frac)`` may return a feasible integer vector used to
     tighten the incumbent.  ``branch_priority`` raises branching priority
     for the flagged variables (HFLOP: branch y_j before x_ij)."""
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     nv = c.shape[0]
     ub = np.ones(nv)
     best_x, best_obj = None, np.inf
@@ -210,7 +211,7 @@ def solve_milp(c: np.ndarray, A: np.ndarray, b: np.ndarray,
     root = lp_with_fixed({})
     if root.status != "optimal":
         return MILPResult(root.status, best_x, best_obj, 1,
-                          time.perf_counter() - t0)
+                          wall_clock() - t0)
     heap: List[_Node] = [_Node(root.obj, seq, {})]
     nodes = 0
     while heap:
@@ -218,9 +219,9 @@ def solve_milp(c: np.ndarray, A: np.ndarray, b: np.ndarray,
         if node.bound >= best_obj - 1e-9:
             continue
         nodes += 1
-        if nodes > max_nodes or time.perf_counter() - t0 > time_limit_s:
+        if nodes > max_nodes or wall_clock() - t0 > time_limit_s:
             return MILPResult("limit", best_x, best_obj, nodes,
-                              time.perf_counter() - t0)
+                              wall_clock() - t0)
         res = lp_with_fixed(node.fixed)
         if res.status != "optimal" or res.obj >= best_obj - 1e-9:
             continue
@@ -252,4 +253,4 @@ def solve_milp(c: np.ndarray, A: np.ndarray, b: np.ndarray,
                 heapq.heappush(heap, _Node(r.obj, seq, child))
     status = "optimal" if best_x is not None else "infeasible"
     return MILPResult(status, best_x, best_obj, nodes,
-                      time.perf_counter() - t0)
+                      wall_clock() - t0)

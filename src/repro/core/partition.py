@@ -28,7 +28,7 @@ m = 10^3 edges the dense matrix is 8 GB; the structured form is three
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Union
 
 import numpy as np

@@ -29,8 +29,7 @@ loops (pinned by ``tests/test_solver_scale.py``).
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Optional, Union
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -41,6 +40,7 @@ from repro.core.partition import (AnyInstance, LanHFLOPInstance,
                                   partition_instance, sub_instance)
 from repro.telemetry import (SpanTracer, Telemetry,
                              maybe as _maybe_tel)
+from repro.telemetry.tracer import wall_clock
 
 _CHUNK0 = 256                 # speculation chunk start size
 _CHUNK_CELLS = 4_000_000      # cap chunk_rows * m (bounded memory)
@@ -75,7 +75,7 @@ def _local_costs_any(inst: AnyInstance, assign: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def solve_bruteforce(inst: HFLOPInstance) -> HFLOPSolution:
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     n, m = inst.n, inst.m
     if (m + 1) ** n > 5_000_000:
         raise ValueError("instance too large for brute force")
@@ -112,9 +112,9 @@ def solve_bruteforce(inst: HFLOPInstance) -> HFLOPSolution:
     if best is None:
         return HFLOPSolution(np.full(n, -1), np.inf, optimal=False,
                              solver="bruteforce",
-                             wall_time_s=time.perf_counter() - t0)
+                             wall_time_s=wall_clock() - t0)
     return HFLOPSolution(best, best_cost, optimal=True, solver="bruteforce",
-                         wall_time_s=time.perf_counter() - t0)
+                         wall_time_s=wall_clock() - t0)
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +303,7 @@ def solve_greedy(inst: AnyInstance) -> HFLOPSolution:
     cheapest feasible edge (open cost amortized), then close unprofitable
     edges, then drop surplus devices if T < n.  Accepts dense or
     structured (LAN) instances; all passes are chunk-vectorized."""
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     n, m = inst.n, inst.m
     assign = np.full(n, -1, int)
     load = np.zeros(m)
@@ -328,7 +328,7 @@ def solve_greedy(inst: AnyInstance) -> HFLOPSolution:
     cost = (_objective_any(inst, assign)
             if np.sum(assign >= 0) >= inst.T else np.inf)
     return HFLOPSolution(assign, cost, optimal=False, solver="greedy",
-                         wall_time_s=time.perf_counter() - t0)
+                         wall_time_s=wall_clock() - t0)
 
 
 def local_search(inst: HFLOPInstance, sol: HFLOPSolution,
@@ -337,7 +337,7 @@ def local_search(inst: HFLOPInstance, sol: HFLOPSolution,
     (with edge open/close bookkeeping) are evaluated in one ``(n, m)``
     matrix pass per iteration; the best move commits and the state is
     rebuilt from scratch (keeps float accumulation order canonical)."""
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     n, m = inst.n, inst.m
     if not np.isfinite(sol.cost) or not is_feasible(inst, sol.assign):
         return sol                      # nothing feasible to improve
@@ -370,7 +370,7 @@ def local_search(inst: HFLOPInstance, sol: HFLOPSolution,
     return HFLOPSolution(assign, cost, optimal=False,
                          solver=sol.solver + "+ls",
                          wall_time_s=sol.wall_time_s
-                         + time.perf_counter() - t0)
+                         + wall_clock() - t0)
 
 
 def _batch_moves(inst: HFLOPInstance, assign: np.ndarray,
@@ -548,7 +548,7 @@ def solve_decomposed(inst: AnyInstance, regions: Optional[int] = None,
     throwaway local tracer provides the same timing.  ``meta["phase_s"]``
     is a thin compatibility view of those spans' durations.
     """
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     n, m = inst.n, inst.m
     lan = isinstance(inst, LanHFLOPInstance)
     tel = _maybe_tel(telemetry)
@@ -641,7 +641,7 @@ def solve_decomposed(inst: AnyInstance, regions: Optional[int] = None,
                           if lb > 0 and np.isfinite(cost)
                           else float("nan"))}
     return HFLOPSolution(assign, cost, optimal=False, solver="decomposed",
-                         wall_time_s=time.perf_counter() - t0, meta=meta)
+                         wall_time_s=wall_clock() - t0, meta=meta)
 
 
 def _polish_dense(dense: HFLOPInstance, assign: np.ndarray,
@@ -773,7 +773,7 @@ def _round_lp(inst: HFLOPInstance, xfrac: np.ndarray) -> Optional[np.ndarray]:
 
 def solve_bnb(inst: HFLOPInstance, time_limit_s: float = 600.0,
               max_nodes: int = 200_000) -> HFLOPSolution:
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     ilp = build_ilp(inst)
     warm = solve_heuristic(inst)
     inc = None
@@ -793,13 +793,13 @@ def solve_bnb(inst: HFLOPInstance, time_limit_s: float = 600.0,
     if res.x is None:
         return HFLOPSolution(np.full(inst.n, -1), np.inf, optimal=False,
                              solver="bnb", nodes_explored=res.nodes,
-                             wall_time_s=time.perf_counter() - t0)
+                             wall_time_s=wall_clock() - t0)
     xm = res.x[:inst.n * inst.m].reshape(inst.n, inst.m)
     assign = np.where(xm.max(axis=1) > 0.5, np.argmax(xm, axis=1), -1)
     return HFLOPSolution(assign, objective(inst, assign),
                          optimal=res.status == "optimal", solver="bnb",
                          nodes_explored=res.nodes,
-                         wall_time_s=time.perf_counter() - t0)
+                         wall_time_s=wall_clock() - t0)
 
 
 # ---------------------------------------------------------------------------

@@ -3,8 +3,8 @@ placement layer (core), the FL runtime (fl/), the inference router
 (routing/) and the TPU mesh mapping (launch/)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -11,7 +11,7 @@ for training exactly like standard METR-LA pipelines."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

@@ -1,24 +1,48 @@
-from repro.fl.aggregation import cluster_fedavg, fedavg, global_fedavg
-from repro.fl.client import (ClientBatch, eval_clients, stack_clients,
-                             train_clients_locally, unstack_client)
-from repro.fl.collectives import (cluster_divergence, cluster_slice,
-                                  flat_allreduce, global_sync,
-                                  hierarchical_allreduce,
-                                  stack_for_clusters)
-from repro.fl.compression import (EFState, compressed_global_sync,
-                                  dequantize_int8, init_ef_state,
-                                  quantize_int8, sync_bytes)
-from repro.fl.hierarchy import (ContinualHFL, HFLResult, HFLRunConfig,
-                                RoundWindow, continuous_vs_static,
-                                round_schedule)
+"""Hierarchical federated learning subsystem.
 
-__all__ = [
-    "cluster_fedavg", "fedavg", "global_fedavg", "ClientBatch",
-    "eval_clients", "stack_clients", "train_clients_locally",
-    "unstack_client", "cluster_divergence", "cluster_slice",
-    "flat_allreduce", "global_sync", "hierarchical_allreduce",
-    "stack_for_clusters", "EFState", "compressed_global_sync",
-    "dequantize_int8", "init_ef_state", "quantize_int8", "sync_bytes",
-    "ContinualHFL", "HFLResult", "HFLRunConfig", "RoundWindow",
-    "continuous_vs_static", "round_schedule",
-]
+The round-timeline types (``repro.fl.schedule``: numpy/stdlib-only)
+are imported eagerly; everything else — aggregation, clients,
+collectives, compression, the continual-HFL runner — is jax-backed and
+lazy (PEP 562), so the co-simulation stack (``repro.sim`` imports
+``round_schedule``) stays a jax-free importer (contract LAYER001).
+"""
+import importlib
+
+from repro.fl.schedule import RoundWindow, round_schedule
+
+_LAZY = {
+    "cluster_fedavg": "repro.fl.aggregation",
+    "fedavg": "repro.fl.aggregation",
+    "global_fedavg": "repro.fl.aggregation",
+    "ClientBatch": "repro.fl.client",
+    "eval_clients": "repro.fl.client",
+    "stack_clients": "repro.fl.client",
+    "train_clients_locally": "repro.fl.client",
+    "unstack_client": "repro.fl.client",
+    "cluster_divergence": "repro.fl.collectives",
+    "cluster_slice": "repro.fl.collectives",
+    "flat_allreduce": "repro.fl.collectives",
+    "global_sync": "repro.fl.collectives",
+    "hierarchical_allreduce": "repro.fl.collectives",
+    "stack_for_clusters": "repro.fl.collectives",
+    "EFState": "repro.fl.compression",
+    "compressed_global_sync": "repro.fl.compression",
+    "dequantize_int8": "repro.fl.compression",
+    "init_ef_state": "repro.fl.compression",
+    "quantize_int8": "repro.fl.compression",
+    "sync_bytes": "repro.fl.compression",
+    "ContinualHFL": "repro.fl.hierarchy",
+    "HFLResult": "repro.fl.hierarchy",
+    "HFLRunConfig": "repro.fl.hierarchy",
+    "continuous_vs_static": "repro.fl.hierarchy",
+}
+
+__all__ = ["RoundWindow", "round_schedule"] + list(_LAZY)
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(module), name)

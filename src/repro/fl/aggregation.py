@@ -6,7 +6,7 @@ the "data" mesh axis), and global aggregation averages cluster models
 (mirror of the psum over the "pod" axis)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

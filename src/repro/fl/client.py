@@ -8,11 +8,10 @@ sharding used on the TPU mesh (see fl/collectives.py)."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import gru

@@ -14,8 +14,7 @@ formulation used by the roofline benchmarks.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, applicable_shapes, get_config
 from repro.configs.registry import ASSIGNED

@@ -10,11 +10,9 @@ Weights: ``embed`` is FSDP-sharded over "data"; ``mlp``/``heads``/
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import attention as attn_mod

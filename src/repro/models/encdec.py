@@ -9,7 +9,7 @@ parameter — recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ forecasting on METR-LA-style windows.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Basic layers: norms, MLPs, embeddings, logits head."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

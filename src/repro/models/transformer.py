@@ -12,7 +12,7 @@ cache capacities (local layers keep only a 512-slot ring).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

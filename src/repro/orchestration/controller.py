@@ -8,9 +8,8 @@
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, List, Optional, Sequence
 
 import numpy as np
 
@@ -18,6 +17,7 @@ from repro.core.hflop import HFLOPInstance, HFLOPSolution, is_feasible
 from repro.core.solvers import solve_bnb, solve_decomposed, solve_heuristic
 from repro.core.topology import ClusterTopology
 from repro.orchestration.gpo import Inventory
+from repro.telemetry.tracer import wall_clock
 
 if TYPE_CHECKING:   # deployments without serving tiers never import jax
     from repro.serving.replica import ReplicaPool, TierSpec
@@ -34,7 +34,7 @@ class Deployment:
     client_nodes: List[int]
     inference_services: List[str]
     replica_pool: Optional["ReplicaPool"] = None
-    created_at: float = field(default_factory=time.monotonic)
+    created_at: float = field(default_factory=wall_clock)
 
     @classmethod
     def from_topology(cls, topo: ClusterTopology,

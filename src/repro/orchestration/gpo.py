@@ -6,8 +6,8 @@ cloud) exposing exactly the information the HFL-specific orchestrator
 needs: node resource states, network costs, and inference workloads."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import numpy as np
 

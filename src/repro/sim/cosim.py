@@ -44,7 +44,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.topology import ClusterTopology
-from repro.fl.hierarchy import RoundWindow
+from repro.fl.schedule import RoundWindow
 from repro.routing.latency import LatencyModel
 from repro.routing.rules import EdgeState, RouteDecision
 from repro.routing.simulator import RequestLog, RequestProcessor
@@ -174,7 +174,10 @@ class CoSim:
             m.gauge("reconfig.budget_total").set(budget.total)
             m.gauge("reconfig.budget_spent").set(budget.spent)
             m.gauge("reconfig.budget_overrun").set(0.0)
-            budget.observer = self._on_budget_charge
+            # the observer hook only mirrors charges into metrics —
+            # the ledger's accept/veto decisions never read it
+            # (sanctioned site, see CONTRACTS.md)
+            budget.observer = self._on_budget_charge  # contract: ok TEL001
 
         s = self.sim
         s.on(EventKind.ROUND_START, self._on_round_start)

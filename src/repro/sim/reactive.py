@@ -42,12 +42,11 @@ reactive run is reproducible seed-for-seed like any other.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
-from repro.fl.hierarchy import round_schedule
+from repro.fl.schedule import round_schedule
 from repro.sim.events import Event, EventKind, Simulation
 
 

@@ -32,7 +32,7 @@ import numpy as np
 from repro.core.topology import ClusterTopology
 from repro.routing.latency import LatencyModel
 from repro.routing.simulator import RequestLog
-from repro.fl.hierarchy import round_schedule
+from repro.fl.schedule import round_schedule
 from repro.orchestration import Inventory, LearningController
 from repro.orchestration.controller import Deployment
 from repro.sim.budget import ReconfigBudget
@@ -196,6 +196,73 @@ def mobility_scenario(moves: Sequence[Tuple[float, int, int]] = (
     return Scenario("mobility",
                     f"{len(tuple(moves))} device handovers between LAN "
                     "edges (with handover cost)", inject)
+
+
+def _edge_anchors(m: int) -> np.ndarray:
+    """LAN edge anchor points: cell centers of the smallest square grid
+    covering ``m`` edges in the unit square.  Deterministic in ``m``
+    alone, so the spatial meaning of "edge j" is stable across seeds."""
+    g = math.ceil(math.sqrt(m))
+    centers = [((i % g + 0.5) / g, (i // g + 0.5) / g) for i in range(m)]
+    return np.asarray(centers[:m], dtype=float)
+
+
+def random_waypoint_moves(n: int, m: int, duration_s: float,
+                          seed: int = 0,
+                          speed: Tuple[float, float] = (0.005, 0.02),
+                          pause_s: float = 5.0,
+                          sample_dt: float = 1.0,
+                          ) -> List[Tuple[float, int, int]]:
+    """Random-waypoint mobility trace as a DEVICE_MOVE event list.
+
+    Devices live in the unit square; each repeatedly picks a uniform
+    waypoint and walks there at a uniform speed (fraction of the square
+    per second), pausing ``pause_s`` between legs — the classic random
+    waypoint model.  A device is associated with its nearest LAN edge
+    anchor (:func:`_edge_anchors`); whenever the nearest edge changes
+    at a ``sample_dt`` boundary, a ``(t, device, new_edge)`` handover
+    is emitted, directly consumable by :func:`mobility_scenario`.
+
+    All randomness comes from ``np.random.default_rng(seed)`` drawn in
+    a fixed per-device order, so the trace is bit-reproducible
+    (contract DET001): same arguments, same moves.
+    """
+    if n <= 0 or m <= 0 or duration_s <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    anchors = _edge_anchors(m)
+
+    def nearest(p: np.ndarray) -> int:
+        d2 = ((anchors - p) ** 2).sum(axis=1)
+        return int(np.argmin(d2))
+
+    moves: List[Tuple[float, int, int]] = []
+    for dev in range(n):
+        pos = rng.uniform(0.0, 1.0, 2)
+        edge = nearest(pos)
+        t = 0.0
+        next_sample = sample_dt
+        while t < duration_s:
+            target = rng.uniform(0.0, 1.0, 2)
+            v = rng.uniform(speed[0], speed[1])
+            leg = float(np.linalg.norm(target - pos))
+            leg_end = t + leg / max(v, 1e-12)
+            direction = (target - pos) / max(leg, 1e-12)
+            # sample the walk at dt boundaries; handovers fire there
+            while next_sample <= min(leg_end, duration_s):
+                p = pos + direction * v * (next_sample - t)
+                e = nearest(p)
+                if e != edge:
+                    moves.append((next_sample, dev, e))
+                    edge = e
+                next_sample += sample_dt
+            pos = target
+            t = leg_end + pause_s
+            next_sample = max(next_sample,
+                              math.floor(t / sample_dt) * sample_dt
+                              + sample_dt)
+    moves.sort()
+    return moves
 
 
 def multi_tenant_scenario(job_rate_per_edge: float = 1.0 / 25.0,

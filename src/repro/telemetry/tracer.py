@@ -35,6 +35,19 @@ from typing import Dict, Hashable, Iterator, List, Optional
 _PID = {"sim": 1, "wall": 2}
 
 
+def wall_clock() -> float:
+    """The repo's one audited wall-clock read (``time.perf_counter``).
+
+    Solver/control-path code that legitimately measures real elapsed
+    time (``HFLOPSolution.wall_time_s``, the MILP time limit,
+    ``Deployment.created_at``) calls this seam instead of the ``time``
+    module directly: the determinism contract (DET002, see
+    CONTRACTS.md) forbids raw wall-clock reads in sim/control/solver
+    paths, so every remaining read is greppable here and never leaks
+    into event ordering, routing decisions, or RNG streams."""
+    return time.perf_counter()
+
+
 @dataclass
 class Span:
     """One closed interval.  ``t0``/``dur`` are seconds in the span's

@@ -9,8 +9,7 @@ emit no cross-cluster collectives; ``global_sync`` (fl.collectives) is a
 separate program run every l rounds."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,11 @@
+"""DET001 bad fixture: global-state RNG in a sim path."""
+import random
+from random import choice
+
+import numpy as np
+
+
+def sample(n):
+    x = np.random.rand(n)           # global numpy RNG
+    np.random.seed(0)               # global reseed
+    return x, random.random(), choice([1, 2])

@@ -1,0 +1,9 @@
+"""DET001 good fixture: explicit Generator streams only."""
+import numpy as np
+from numpy.random import default_rng
+
+
+def sample(n, seed=0):
+    rng = np.random.default_rng(seed)
+    other = default_rng(seed + 1)
+    return rng.normal(size=n) + other.uniform(size=n)

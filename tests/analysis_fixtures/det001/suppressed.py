@@ -1,0 +1,6 @@
+"""DET001 suppressed fixture: sanctioned global draw."""
+import numpy as np
+
+
+def sample(n):
+    return np.random.rand(n)  # contract: ok DET001

@@ -1,0 +1,16 @@
+"""DET002 bad fixture: wall-clock reads in a sim path."""
+import time
+from dataclasses import dataclass, field
+from datetime import datetime
+
+
+def stamp():
+    t0 = time.perf_counter()
+    now = datetime.now()
+    return t0, now, time.time()
+
+
+@dataclass
+class Record:
+    # passes the function without calling it here — still wall time
+    created_at: float = field(default_factory=time.monotonic)

@@ -1,0 +1,6 @@
+"""DET002 good fixture: the audited wall-clock seam."""
+from repro.telemetry.tracer import wall_clock
+
+
+def stamp():
+    return wall_clock()

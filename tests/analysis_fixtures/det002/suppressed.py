@@ -1,0 +1,7 @@
+"""DET002 suppressed fixture: sanctioned raw read."""
+import time
+
+
+def stamp():
+    # contract: ok DET002
+    return time.perf_counter()

@@ -1,0 +1,24 @@
+"""Fixture: EVENT_EFFECTS out of sync with EventKind."""
+from enum import IntEnum
+from typing import Dict
+
+
+class EventKind(IntEnum):
+    REQUEST_COMPLETION = 0
+    DEVICE_MOVE = 1
+    ROUND_START = 2
+    TELEMETRY = 3          # missing from EVENT_EFFECTS below
+
+
+class EventEffect(IntEnum):
+    NONE = 0
+    MUTATES_ROUTING = 1
+    READS_LOG = 2
+
+
+EVENT_EFFECTS: Dict[EventKind, EventEffect] = {
+    EventKind.REQUEST_COMPLETION: EventEffect.MUTATES_ROUTING,
+    EventKind.DEVICE_MOVE: EventEffect.MUTATES_ROUTING,
+    EventKind.ROUND_START: EventEffect.NONE,
+    EventKind.ROUND_END: EventEffect.NONE,     # stale: no such member
+}

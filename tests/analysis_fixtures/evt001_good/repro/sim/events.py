@@ -1,0 +1,21 @@
+"""Fixture: EVENT_EFFECTS covering EventKind exactly."""
+from enum import IntEnum
+from typing import Dict
+
+
+class EventKind(IntEnum):
+    REQUEST_COMPLETION = 0
+    DEVICE_MOVE = 1
+    ROUND_START = 2
+
+
+class EventEffect(IntEnum):
+    NONE = 0
+    MUTATES_ROUTING = 1
+
+
+EVENT_EFFECTS: Dict[EventKind, EventEffect] = {
+    EventKind.REQUEST_COMPLETION: EventEffect.MUTATES_ROUTING,
+    EventKind.DEVICE_MOVE: EventEffect.MUTATES_ROUTING,
+    EventKind.ROUND_START: EventEffect.NONE,
+}

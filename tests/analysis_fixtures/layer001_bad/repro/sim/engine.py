@@ -1,0 +1,6 @@
+"""Fixture: protected sim module reaching jax transitively."""
+from repro.trainer import train_step
+
+
+def run(params, batch):
+    return train_step(params, batch)

@@ -1,0 +1,10 @@
+"""Fixture: protected sim module keeping jax out of import time."""
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.trainer import train_step
+
+
+def run(params, batch):
+    from repro.trainer import train_step   # function-local: non-eager
+    return train_step(params, batch)

@@ -1,0 +1,7 @@
+"""Fixture: a jax-backed training module."""
+import jax
+import jax.numpy as jnp
+
+
+def train_step(params, batch):
+    return jax.tree_util.tree_map(jnp.zeros_like, params), batch

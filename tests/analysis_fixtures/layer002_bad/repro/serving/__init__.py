@@ -1,0 +1,6 @@
+"""Fixture: serving facade that eagerly imports jax (contract breach)."""
+import jax
+
+
+def engine():
+    return jax

@@ -1,0 +1,11 @@
+"""Fixture: lazy serving facade (PEP 562)."""
+import importlib
+
+_LAZY = {"Engine": "repro.serving.engine"}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(name)
+    return getattr(importlib.import_module(module), name)

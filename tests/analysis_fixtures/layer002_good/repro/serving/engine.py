@@ -1,0 +1,7 @@
+"""Fixture: the jax-backed engine behind the lazy facade."""
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self.backend = jax

@@ -1,0 +1,17 @@
+"""TEL001 bad fixture: telemetry-guarded block perturbing the sim."""
+
+
+class Handler:
+    def __init__(self, sim, tel, rng):
+        self.sim = sim
+        self._tel = tel
+        self.rng = rng
+        self.pending = []
+
+    def on_event(self, ev):
+        if self._tel is not None:
+            jitter = self.rng.normal()          # RNG drawn only when on
+            self.sim.schedule(ev.t + jitter)    # extra event only when on
+            self.sim.busy = True                # observable mutation
+            self.pending.append(ev)             # observable mutation
+            self._tel.metrics.counter("events").inc()

@@ -1,0 +1,19 @@
+"""TEL001 good fixture: guarded blocks touch telemetry state only."""
+
+
+class Handler:
+    def __init__(self, sim, tel):
+        self.sim = sim
+        self._tel = tel
+        if self._tel is not None:
+            m = self._tel.metrics               # tel-derived local
+            self._ev_counter = m.counter("events")
+            self._lat_hist = m.histogram("latency")
+
+    def on_event(self, ev):
+        if self._tel is not None:
+            self._ev_counter.inc()
+            self._tel.tracer.instant("event", ev.t, kind=str(ev.kind))
+            local = {}                          # block-local scratch
+            local["t"] = ev.t
+            self._tel.audit.record(local)

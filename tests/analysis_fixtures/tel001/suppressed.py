@@ -1,0 +1,11 @@
+"""TEL001 suppressed fixture: sanctioned observer wiring."""
+
+
+class Handler:
+    def __init__(self, budget, tel):
+        self._tel = tel
+        if self._tel is not None:
+            budget.observer = self._on_charge  # contract: ok TEL001
+
+    def _on_charge(self, amount):
+        self._tel.metrics.counter("charges").inc()

@@ -1,0 +1,15 @@
+"""TEL002 bad fixture: facade resolved per call / per iteration."""
+from repro.telemetry import maybe
+
+
+class Router:
+    def __init__(self, telemetry):
+        self.telemetry = telemetry
+
+    def route(self, requests):
+        tel = maybe(self.telemetry)             # per-call resolve
+        for req in requests:
+            t = maybe(self.telemetry)           # per-iteration resolve
+            if t is not None:
+                t.metrics.counter("routed").inc()
+        return tel

@@ -1,0 +1,19 @@
+"""TEL002 good fixture: facade bound once at construction."""
+from repro.telemetry import maybe
+
+
+def run_once(telemetry):
+    tel = maybe(telemetry)                      # module-function scope
+    return tel
+
+
+class Router:
+    def __init__(self, telemetry):
+        self._tel = maybe(telemetry)            # bind once
+
+    def bind(self, cosim):
+        self._tel = maybe(cosim.telemetry)      # re-bind seam
+
+    def route(self, requests):
+        if self._tel is not None:
+            self._tel.metrics.counter("routed").inc()

@@ -1,0 +1,7 @@
+"""TEL002 suppressed fixture: sanctioned per-call resolve."""
+from repro.telemetry import maybe
+
+
+class Router:
+    def route(self, telemetry):
+        return maybe(telemetry)  # contract: ok TEL002

@@ -1,0 +1,225 @@
+"""Contract checker tests: every rule against bad/good/suppressed
+fixtures, the live tree self-check, CLI exit codes, and the
+injection acceptance tests from the contract spec (CONTRACTS.md)."""
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (AstCache, GlobalRngRule, EventEffectsRule,
+                            JaxFreeImportRule, LazyFacadeRule,
+                            NonPerturbationRule, Project,
+                            TelemetryBindOnceRule, WallClockRule,
+                            run_analysis)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+REPO_ROOT = os.path.dirname(HERE)
+SRC = os.path.join(REPO_ROOT, "src")
+
+
+def file_findings(rule, case, name, module):
+    """Run a per-file rule over one fixture file, with suppressions
+    applied the same way the runner applies them."""
+    path = os.path.join(FIXTURES, case, name + ".py")
+    ctx = AstCache().get(path, f"{case}/{name}.py", module)
+    out = []
+    for f in rule.check_file(ctx):
+        if not ctx.suppressed(f.line, f.rule):
+            out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-file rules: DET001 / DET002 / TEL001 / TEL002
+# ---------------------------------------------------------------------------
+
+FILE_RULE_CASES = [
+    (GlobalRngRule, "det001", "repro.sim.fixture", 3),
+    (WallClockRule, "det002", "repro.sim.fixture", 3),
+    (NonPerturbationRule, "tel001", "repro.sim.fixture", 4),
+    (TelemetryBindOnceRule, "tel002", "repro.sim.fixture", 2),
+]
+
+
+@pytest.mark.parametrize("rule_cls,case,module,min_bad", FILE_RULE_CASES)
+def test_bad_fixture_flagged(rule_cls, case, module, min_bad):
+    findings = file_findings(rule_cls(), case, "bad", module)
+    assert len(findings) >= min_bad, [f.format() for f in findings]
+    assert all(f.rule == rule_cls.id for f in findings)
+    assert all(f.line > 0 for f in findings)
+
+
+@pytest.mark.parametrize("rule_cls,case,module,_", FILE_RULE_CASES)
+def test_good_fixture_clean(rule_cls, case, module, _):
+    findings = file_findings(rule_cls(), case, "good", module)
+    assert findings == [], [f.format() for f in findings]
+
+
+@pytest.mark.parametrize("rule_cls,case,module,_", FILE_RULE_CASES)
+def test_suppressed_fixture_clean(rule_cls, case, module, _):
+    rule = rule_cls()
+    # the violation is real (rule fires) ...
+    path = os.path.join(FIXTURES, case, "suppressed.py")
+    ctx = AstCache().get(path, "suppressed.py", module)
+    raw = rule.check_file(ctx)
+    assert raw, "suppressed fixture should contain a real violation"
+    # ... but the inline `# contract: ok` comment absorbs it
+    assert file_findings(rule, case, "suppressed", module) == []
+
+
+def test_det001_out_of_scope_module_ignored():
+    rule = GlobalRngRule()
+    path = os.path.join(FIXTURES, "det001", "bad.py")
+    ctx = AstCache().get(path, "bad.py", "not_repro.module")
+    assert rule.check_file(ctx) == []
+
+
+def test_det002_allows_tracer_module():
+    rule = WallClockRule()
+    path = os.path.join(FIXTURES, "det002", "bad.py")
+    ctx = AstCache().get(path, "bad.py", "repro.telemetry.tracer")
+    assert rule.check_file(ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# project rules: LAYER001 / LAYER002 / EVT001 over mini-trees
+# ---------------------------------------------------------------------------
+
+def project_findings(rule, tree):
+    return rule.check_project(Project(os.path.join(FIXTURES, tree)))
+
+
+def test_layer001_transitive_jax_flagged():
+    findings = project_findings(JaxFreeImportRule(), "layer001_bad")
+    assert findings, "protected module reaching jax must be flagged"
+    assert any("repro/sim/engine.py" in f.path for f in findings)
+    assert any("jax" in f.message and "->" in f.message
+               for f in findings)
+
+
+def test_layer001_lazy_imports_clean():
+    assert project_findings(JaxFreeImportRule(), "layer001_good") == []
+
+
+def test_layer002_eager_facade_flagged():
+    findings = project_findings(LazyFacadeRule(), "layer002_bad")
+    assert findings
+    assert all(f.rule == "LAYER002" for f in findings)
+
+
+def test_layer002_lazy_facade_clean():
+    assert project_findings(LazyFacadeRule(), "layer002_good") == []
+
+
+def test_evt001_missing_and_stale_flagged():
+    findings = project_findings(EventEffectsRule(), "evt001_bad")
+    msgs = [f.message for f in findings]
+    assert any("TELEMETRY" in m and "no EVENT_EFFECTS" in m
+               for m in msgs), msgs
+    assert any("stale key" in m and "ROUND_END" in m for m in msgs), msgs
+
+
+def test_evt001_complete_mapping_clean():
+    assert project_findings(EventEffectsRule(), "evt001_good") == []
+
+
+# ---------------------------------------------------------------------------
+# live tree: the repo satisfies its own contracts
+# ---------------------------------------------------------------------------
+
+def test_live_tree_zero_findings():
+    result = run_analysis(REPO_ROOT)
+    assert result.ok, "\n" + result.format()
+    assert result.files_checked > 50
+    # the only sanctioned suppression: cosim budget-observer wiring,
+    # documented in CONTRACTS.md — new suppressions must be added there
+    sites = {(p, r) for p, _line, r in result.suppressions_used}
+    assert sites == {("src/repro/sim/cosim.py", "TEL001")}, sites
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes and JSON output
+# ---------------------------------------------------------------------------
+
+def run_cli(*argv):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT)
+
+
+def test_cli_clean_tree_exit_zero():
+    proc = run_cli()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "contract check OK" in proc.stdout
+
+
+def test_cli_bad_tree_exit_one(tmp_path):
+    proc = run_cli("--root", os.path.join(FIXTURES, "layer001_bad"),
+                   "--rules", "LAYER001",
+                   "--json", str(tmp_path / "out.json"))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "LAYER001" in proc.stdout
+    import json
+    data = json.loads((tmp_path / "out.json").read_text())
+    assert data["ok"] is False
+    assert data["counts"].get("LAYER001", 0) >= 1
+
+
+def test_cli_unknown_rule_exit_two():
+    assert run_cli("--rules", "NOPE999").returncode == 2
+
+
+def test_cli_missing_root_exit_two(tmp_path):
+    assert run_cli("--root", str(tmp_path)).returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# injection acceptance tests: mutating the real tree trips the gate
+# ---------------------------------------------------------------------------
+
+def copy_src_tree(tmp_path):
+    dst = tmp_path / "src" / "repro"
+    shutil.copytree(os.path.join(SRC, "repro"), dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return tmp_path
+
+
+def test_injected_global_rng_fails_gate(tmp_path):
+    root = copy_src_tree(tmp_path)
+    target = root / "src" / "repro" / "sim" / "request_plane.py"
+    with open(target, "a") as f:
+        f.write("\n\ndef _injected(n):\n"
+                "    import numpy as np\n"
+                "    return np.random.rand(n)\n")
+    result = run_analysis(str(root))
+    assert not result.ok
+    assert any(f.rule == "DET001" and "request_plane" in f.path
+               for f in result.findings)
+
+
+def test_added_event_kind_without_effects_fails_gate(tmp_path):
+    root = copy_src_tree(tmp_path)
+    target = root / "src" / "repro" / "sim" / "events.py"
+    source = target.read_text()
+    marker = "    REQUEST_ARRIVAL = 15"
+    assert marker in source
+    target.write_text(source.replace(
+        marker, marker + "\n    INJECTED_KIND = 16", 1))
+    result = run_analysis(str(root))
+    assert not result.ok
+    assert any(f.rule == "EVT001" and "INJECTED_KIND" in f.message
+               for f in result.findings)
+
+
+def test_injected_eager_jax_import_fails_gate(tmp_path):
+    root = copy_src_tree(tmp_path)
+    target = root / "src" / "repro" / "routing" / "simulator.py"
+    target.write_text("import jax\n" + target.read_text())
+    result = run_analysis(str(root))
+    assert not result.ok
+    assert any(f.rule == "LAYER001" and "simulator" in f.path
+               for f in result.findings)

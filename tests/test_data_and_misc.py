@@ -1,11 +1,9 @@
 """Traffic data generator, checkpoint roundtrip, orchestration controller,
 serving engine."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_config

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.fl import (ClientBatch, EFState, cluster_fedavg,
                       compressed_global_sync, dequantize_int8, fedavg,

@@ -1,0 +1,89 @@
+"""Runtime proof of the LAYER001/LAYER002 contracts: import the
+protected stack in a subprocess where jax is *blocked* (a meta-path
+finder that raises on any attempt), and separately assert that
+importing it the normal way never pulls jax into sys.modules.  The
+static rule catches the import graph; this catches dynamic imports the
+AST walk can't see."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+BLOCKER = textwrap.dedent("""
+    import sys
+
+    BLOCKED = ("jax", "jaxlib", "flax", "optax")
+
+    class _Blocker:
+        def find_module(self, name, path=None):
+            return self.find_spec(name, path)
+
+        def find_spec(self, name, path=None, target=None):
+            root = name.split(".")[0]
+            if root in BLOCKED:
+                raise ImportError(
+                    f"contract LAYER001: {name} imported while blocked")
+            return None
+
+    sys.meta_path.insert(0, _Blocker())
+""")
+
+PROTECTED = ["repro.routing", "repro.sim", "repro.core",
+             "repro.telemetry", "repro.configs", "repro.fl.schedule"]
+
+#: importing the lazy facades must also stay jax-free (LAYER002) —
+#: only *attribute access* on them may pay the jax import
+FACADES = ["repro.serving", "repro.fl"]
+
+
+def run_with_blocker(body):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-c", BLOCKER + body],
+                          capture_output=True, text=True, env=env)
+
+
+def test_blocker_actually_blocks():
+    proc = run_with_blocker("import jax\n")
+    assert proc.returncode != 0
+    assert "contract LAYER001" in proc.stderr
+
+
+def test_protected_stack_imports_with_jax_blocked():
+    body = "".join(f"import {m}\n" for m in PROTECTED + FACADES)
+    body += "print('imported-ok')\n"
+    proc = run_with_blocker(body)
+    assert proc.returncode == 0, proc.stderr
+    assert "imported-ok" in proc.stdout
+
+
+def test_protected_stack_usable_with_jax_blocked():
+    """Not just importable: the numpy sim stack runs end to end."""
+    body = textwrap.dedent("""
+        from repro.fl.schedule import round_schedule
+        from repro.sim.scenarios import random_waypoint_moves
+        windows = round_schedule(rounds=2, l=2)
+        moves = random_waypoint_moves(8, 4, 30.0, seed=3)
+        assert windows and isinstance(moves, list)
+        print("ran-ok", len(windows), len(moves))
+    """)
+    proc = run_with_blocker(body)
+    assert proc.returncode == 0, proc.stderr
+    assert "ran-ok" in proc.stdout
+
+
+def test_normal_import_keeps_jax_out_of_sys_modules():
+    body = "".join(f"import {m}\n" for m in PROTECTED + FACADES)
+    body += ("import sys\n"
+             "bad = sorted(m for m in sys.modules\n"
+             "             if m.split('.')[0] in ('jax', 'jaxlib',\n"
+             "                                    'flax', 'optax'))\n"
+             "assert not bad, f'jax leaked in: {bad}'\n"
+             "print('no-jax-ok')\n")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", body],
+                          capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "no-jax-ok" in proc.stdout

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps, assert_allclose against
 the pure-jnp oracles in kernels/ref.py (interpret=True on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
