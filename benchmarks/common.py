@@ -67,10 +67,13 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
             m.text(key).set(str(value))
 
 
-def rows_from_registry() -> Dict[str, Dict[str, object]]:
+def rows_from_registry(prefix: str = "") -> Dict[str, Dict[str, object]]:
     """Reconstruct ``{name: {field: value}}`` from the telemetry
     registry (``bench:{name}:{field}`` keys; benchmark names contain no
-    colons, so ``rsplit(':', 1)`` recovers the field)."""
+    colons, so ``rsplit(':', 1)`` recovers the field).  ``prefix``
+    restricts the payload to benchmark names starting with it (so a
+    section can export its own BENCH_*.json without dragging along every
+    row emitted earlier in the process)."""
     snap = TELEMETRY.metrics.snapshot()
     payload: Dict[str, Dict[str, object]] = {}
     for kind in ("gauges", "texts"):
@@ -78,11 +81,13 @@ def rows_from_registry() -> Dict[str, Dict[str, object]]:
             if not key.startswith("bench:"):
                 continue
             name, field = key[len("bench:"):].rsplit(":", 1)
+            if prefix and not name.startswith(prefix):
+                continue
             payload.setdefault(name, {})[field] = value
     return payload
 
 
-def write_json(path: str) -> None:
+def write_json(path: str, prefix: str = "") -> None:
     """Snapshot every emitted benchmark row to ``path`` as
     ``{name: {us_per_call, ...derived fields...}}`` — the perf record
     CI uploads (``requests_per_s`` rows carry the event-engine
@@ -90,5 +95,5 @@ def write_json(path: str) -> None:
     payload comes out of the telemetry registry, so it is exactly what
     ``TELEMETRY.to_prometheus()`` exposes under another format."""
     with open(path, "w") as f:
-        json.dump(rows_from_registry(), f, indent=2, sort_keys=True)
+        json.dump(rows_from_registry(prefix), f, indent=2, sort_keys=True)
         f.write("\n")

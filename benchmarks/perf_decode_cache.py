@@ -69,6 +69,109 @@ def measured_decode(arch: str, decode_steps: int = 16) -> dict:
     return out
 
 
+def run_paged(arch="stablelm-1.6b", page_size=16, max_len=256,
+              dense_batch=4, prompt_len=16, new_tokens=16,
+              decode_steps=8, out="BENCH_serving.json") -> dict:
+    """§Perf hillclimb: paged-vs-dense serving rows (BENCH_serving.json).
+
+    Same cache HBM on both sides — the dense engine reserves
+    ``dense_batch`` full ``max_len`` rows, the paged engine gets exactly
+    that many tokens as a shared :class:`PagePool` — then:
+
+      serving_paged_concurrency  max concurrent sequences until
+                                 ``can_admit`` refuses (prompt_len +
+                                 new_tokens reservation per request);
+      serving_paged_step_time    batched decode step wall time at
+                                 matched occupancy (dense_batch active
+                                 rows on both engines).
+
+    Rows land in the telemetry-backed registry and are exported with the
+    ``serving_`` prefix filter so the artifact stays self-contained."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit, write_json
+    from repro.models import make_model
+    from repro.serving import PagedServeEngine, ServeEngine
+
+    cfg = get_config(arch).reduced()
+    api = make_model(cfg)
+    params, _ = api.init_params(jax.random.key(0))
+
+    pages_dense = -(-max_len // page_size)
+    num_pages = dense_batch * pages_dense        # == dense cache tokens
+    cache_tokens = num_pages * page_size
+    seq_budget = prompt_len + new_tokens
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, max(cfg.model.vocab_size, 2), (prompt_len,))
+
+    def fill(engine) -> tuple:
+        """Admit prompt+reservation requests until the engine refuses;
+        returns (count, mean admit ms)."""
+        n = 0
+        t0 = time.perf_counter()
+        while engine.can_admit(prompt_len, new_tokens):
+            slot = engine.acquire_slot()
+            if slot is None:
+                break
+            engine.admit(prompt, slot=slot, reserve_tokens=new_tokens)
+            n += 1
+        return n, (time.perf_counter() - t0) * 1e3 / max(n, 1)
+
+    def step_ms(engine, active: int, steps: int) -> float:
+        for _ in range(min(active, 2)):          # warmup covers compile
+            engine.decode()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            engine.decode()
+        return (time.perf_counter() - t0) * 1e3 / steps
+
+    # -- capacity at equal cache HBM ---------------------------------------
+    dense = ServeEngine(cfg, params, batch_size=dense_batch,
+                        max_len=max_len)
+    # row cap sized by the token budget, not by dense slots
+    paged = PagedServeEngine(cfg, params,
+                             max_seqs=cache_tokens // seq_budget,
+                             page_size=page_size, num_pages=num_pages,
+                             max_len=max_len)
+    n_dense, admit_dense_ms = fill(dense)
+    n_paged, admit_paged_ms = fill(paged)
+    ratio = n_paged / max(n_dense, 1)
+    print(f"concurrency @ {cache_tokens} cache tokens: dense={n_dense} "
+          f"paged={n_paged} ({ratio:.1f}x)")
+    emit("serving_paged_concurrency", admit_paged_ms * 1e3,
+         f"dense_max_seqs={n_dense};paged_max_seqs={n_paged};"
+         f"concurrency_ratio={ratio};cache_tokens={cache_tokens};"
+         f"page_size={page_size};dense_admit_us={admit_dense_ms * 1e3:.1f}")
+
+    # -- decode step time at matched occupancy -----------------------------
+    # a fresh paged engine with dense-equal rows: both engines now decode
+    # a dense_batch-row program with dense_batch active sequences
+    paged_eq = PagedServeEngine(cfg, params, max_seqs=dense_batch,
+                                page_size=page_size, num_pages=num_pages,
+                                max_len=max_len)
+    fill(paged_eq)
+    dense_ms = step_ms(dense, n_dense, decode_steps)
+    paged_ms = step_ms(paged_eq, dense_batch, decode_steps)
+    step_ratio = paged_ms / max(dense_ms, 1e-9)
+    print(f"decode step @ occupancy {dense_batch}: dense={dense_ms:.1f}ms "
+          f"paged={paged_ms:.1f}ms ({step_ratio:.2f}x)")
+    emit("serving_paged_step_time", paged_ms * 1e3,
+         f"dense_step_us={dense_ms * 1e3:.1f};step_time_ratio={step_ratio};"
+         f"occupancy={dense_batch};decode_steps={decode_steps}")
+
+    res = {"dense_max_seqs": n_dense, "paged_max_seqs": n_paged,
+           "concurrency_ratio": ratio, "cache_tokens": cache_tokens,
+           "dense_step_ms": dense_ms, "paged_step_ms": paged_ms,
+           "step_time_ratio": step_ratio}
+    if out:
+        write_json(out, prefix="serving_")
+        print(f"# wrote {out}")
+    return res
+
+
 def report(arch="stablelm-1.6b", shape="decode_32k", out="",
            measure=False):
     mesh = make_production_mesh(multi_pod=False)
@@ -120,5 +223,11 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="results/perf_decode_cache.json")
     ap.add_argument("--measure", action="store_true",
                     help="also time the real tiered engines (ReplicaPool)")
+    ap.add_argument("--paged", action="store_true",
+                    help="only the paged-vs-dense serving rows "
+                         "(BENCH_serving.json)")
     a = ap.parse_args()
-    report(a.arch, a.shape, a.out, measure=a.measure)
+    if a.paged:
+        run_paged(a.arch)
+    else:
+        report(a.arch, a.shape, a.out, measure=a.measure)

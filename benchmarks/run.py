@@ -57,6 +57,11 @@ def main() -> None:
         from benchmarks import fig2_solver_scaling
         fig2_solver_scaling.run_decomposed(sizes=((100_000, 200),),
                                            sub_seeds=2)
+        print("# --- paged-vs-dense serving smoke (concurrency at equal "
+              "cache HBM + step time, BENCH_serving.json) ---",
+              file=sys.stderr)
+        from benchmarks import perf_decode_cache
+        perf_decode_cache.run_paged(out="BENCH_serving.json")
         _maybe_write_json(args.json)
         _maybe_write_prom(args.prom)
         return

@@ -79,6 +79,42 @@ else:
           f"disabled-mode throughput (floor {TELEMETRY_FLOOR:.0%})")
 EOF
 
+# paged-serving record (written by the smoke above): the paged engines
+# must keep their capacity win (>= 4x concurrent sequences at equal
+# cache HBM) without giving the step time back (<= 1.5x dense at
+# matched occupancy).  Soft, like the other perf floors — shared
+# runners are too noisy for a hard wall-clock gate.
+python - <<'EOF'
+import json
+
+CONCURRENCY_FLOOR = 4.0            # paged/dense admitted sequences
+STEP_TIME_CEIL = 1.5               # paged/dense decode step time
+data = json.load(open("BENCH_serving.json"))
+conc = data.get("serving_paged_concurrency", {})
+ratio = conc.get("concurrency_ratio")
+if ratio is None:
+    print("WARNING: no paged-concurrency row in BENCH_serving.json")
+elif ratio < CONCURRENCY_FLOOR:
+    print(f"WARNING: paged engine admits only {ratio:.1f}x the dense "
+          f"sequences at equal cache HBM — below the soft floor of "
+          f"{CONCURRENCY_FLOOR:.0f}x")
+else:
+    print(f"paged concurrency OK: {conc.get('paged_max_seqs', 0):.0f} vs "
+          f"{conc.get('dense_max_seqs', 0):.0f} dense sequences "
+          f"({ratio:.1f}x >= {CONCURRENCY_FLOOR:.0f}x) at "
+          f"{conc.get('cache_tokens', 0):.0f} cache tokens")
+step = data.get("serving_paged_step_time", {})
+sratio = step.get("step_time_ratio")
+if sratio is None:
+    print("WARNING: no paged step-time row in BENCH_serving.json")
+elif sratio > STEP_TIME_CEIL:
+    print(f"WARNING: paged decode step at {sratio:.2f}x dense at matched "
+          f"occupancy — above the soft ceiling of {STEP_TIME_CEIL:.1f}x")
+else:
+    print(f"paged step time OK: {sratio:.2f}x dense at occupancy "
+          f"{step.get('occupancy', 0):.0f} (ceiling {STEP_TIME_CEIL:.1f}x)")
+EOF
+
 # decomposed-solver record (written by the smoke above): feasibility
 # and the exact-gap bound are hard requirements; wall time gets a soft
 # floor like the engine throughput (shared runners are noisy).

@@ -40,6 +40,53 @@ def decode_attention_ref(q, k, v, valid):
     return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               *, soft_cap=0.0, window=None):
+    """q (B,H,D); k/v_pages (P, ps, Hkv, D); block_tables (B, Pseq) i32;
+    lengths (B,) -> (B,H,Dv).  Gathers pages into a contiguous view and
+    masks logical token index against length (and the sliding window)."""
+    B, H, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Pseq = block_tables.shape[1]
+    C = Pseq * ps
+    k = k_pages[block_tables].reshape(B, C, Hkv, D)
+    v = v_pages[block_tables].reshape(B, C, Hkv, v_pages.shape[-1])
+    tok = jnp.arange(C)[None, :]
+    valid = tok < lengths[:, None]
+    if window is not None:
+        valid &= (lengths[:, None] - 1 - tok) < window
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
+def paged_mla_decode_attention_ref(q_c, q_rope, ckv_pages, krope_pages,
+                                   block_tables, lengths, *, scale):
+    """Absorbed-MLA oracle: q_c (B,H,R); q_rope (B,H,Dr); ckv/krope_pages
+    (P, ps, R|Dr); -> latent context (B,H,R)."""
+    B, H, R = q_c.shape
+    ps = ckv_pages.shape[1]
+    C = block_tables.shape[1] * ps
+    ckv = ckv_pages[block_tables].reshape(B, C, R)
+    kr = krope_pages[block_tables].reshape(B, C, krope_pages.shape[-1])
+    valid = jnp.arange(C)[None, :] < lengths[:, None]
+    s = (jnp.einsum("bhr,bcr->bhc", q_c.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bcd->bhc", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhc,bcr->bhr", p,
+                      ckv.astype(jnp.float32)).astype(q_c.dtype)
+
+
 def gru_seq_ref(xw, h0, w_h):
     """Fused-gate GRU over time: xw (B,T,3h) = x@w_x+b precomputed;
     h0 (B,h); w_h (h,3h).  Returns (B,T,h)."""

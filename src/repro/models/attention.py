@@ -279,6 +279,228 @@ def gqa_prefill(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (block-table) variants
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Paged KV cache shared by all sequences of an engine: ``k_pages`` /
+    ``v_pages`` (P+1, page_size, Hkv, D).  Page ids come from the
+    :class:`~repro.serving.page_pool.PagePool`; token ``t`` of a sequence
+    lives at page ``block_table[t // page_size]`` slot ``t % page_size``.
+    The extra page (id P) is a scratch page: free batch rows point their
+    whole block table at it so the batched decode write lands somewhere
+    harmless."""
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+
+class PagedMLACache(NamedTuple):
+    """Paged compressed-latent cache: ``ckv_pages`` (P+1, page_size, R),
+    ``krope_pages`` (P+1, page_size, Dr).  Same scratch-page convention
+    as :class:`PagedKVCache`."""
+    ckv_pages: jax.Array
+    krope_pages: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.ckv_pages.shape[1]
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, num_kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k_pages=jnp.zeros((num_pages + 1, page_size, num_kv_heads,
+                           head_dim), dtype),
+        v_pages=jnp.zeros((num_pages + 1, page_size, num_kv_heads,
+                           head_dim), dtype),
+    )
+
+
+def init_paged_mla_cache(num_pages: int, page_size: int, a: AttentionConfig,
+                         dtype=jnp.bfloat16) -> PagedMLACache:
+    m = a.mla
+    return PagedMLACache(
+        ckv_pages=jnp.zeros((num_pages + 1, page_size, m.kv_lora_rank),
+                            dtype),
+        krope_pages=jnp.zeros((num_pages + 1, page_size,
+                               m.qk_rope_head_dim), dtype),
+    )
+
+
+def _page_write(pages: jax.Array, new: jax.Array, page_ids: jax.Array,
+                slot_ids: jax.Array) -> jax.Array:
+    """Scatter ``new`` (B, S, ...) into ``pages`` at (page_ids, slot_ids)
+    (both (B, S)); ids equal to ``pages.shape[0]`` are dropped (padding)."""
+    return pages.at[page_ids, slot_ids].set(new.astype(pages.dtype),
+                                            mode="drop")
+
+
+def prefill_page_ids(block_tables: jax.Array, positions: jax.Array,
+                     length: jax.Array, page_size: int,
+                     num_pages: int) -> Tuple[jax.Array, jax.Array]:
+    """Page/slot id per prompt position for a one-shot paged prefill
+    write.  ``block_tables`` (B, Pseq); ``positions`` (S,).  Positions at
+    or past ``length`` (right padding) map to the out-of-bounds page id
+    ``num_pages + 1`` so ``mode='drop'`` scatters discard them."""
+    B = block_tables.shape[0]
+    Pseq = block_tables.shape[1]
+    pidx = jnp.clip(positions // page_size, 0, Pseq - 1)
+    pages = jnp.take_along_axis(block_tables,
+                                jnp.broadcast_to(pidx[None], (B, pidx.shape[0])),
+                                axis=1)
+    keep = (positions < length) & (positions // page_size < Pseq)
+    pages = jnp.where(keep[None], pages, num_pages + 1)
+    slots = jnp.broadcast_to((positions % page_size)[None], pages.shape)
+    return pages, slots
+
+
+def paged_gqa_prefill(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                      positions: jax.Array, length: jax.Array,
+                      cache: PagedKVCache, block_tables: jax.Array,
+                      inv_freq: Optional[jax.Array], window=None,
+                      ) -> Tuple[jax.Array, PagedKVCache]:
+    """Identical attention math to :func:`gqa_prefill`; only the cache
+    write differs — K/V scatter through the block table into pages."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    out = sdpa(q, k, v, positions, positions, causal=True, window=window)
+    ps = cache.page_size
+    num_pages = cache.k_pages.shape[0] - 1
+    pages, slots = prefill_page_ids(block_tables, positions, length, ps,
+                                    num_pages)
+    new_cache = PagedKVCache(
+        k_pages=_page_write(cache.k_pages, k, pages, slots),
+        v_pages=_page_write(cache.v_pages, v, pages, slots),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def paged_gqa_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                     pos: jax.Array, cache: PagedKVCache,
+                     block_tables: jax.Array,
+                     inv_freq: Optional[jax.Array], window=None,
+                     ) -> Tuple[jax.Array, PagedKVCache]:
+    """Batched single-token paged decode.  Unlike :func:`gqa_decode`
+    (vmapped per slot over private caches) every row here shares the one
+    page array, so ``pos`` is per-row (B,) and the batch advances in one
+    program.  Math mirrors :func:`gqa_decode` exactly: same projections,
+    rope, ``_sdpa`` mask path — greedy parity with the dense engine."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    if inv_freq is not None:
+        q = apply_rope(q, pos[:, None], inv_freq)
+        k = apply_rope(k, pos[:, None], inv_freq)
+    ps = cache.page_size
+    Pseq = block_tables.shape[1]
+    pidx = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)
+    slot = (pos % ps)[:, None]
+    new_cache = PagedKVCache(
+        k_pages=_page_write(cache.k_pages, k, pidx, slot),
+        v_pages=_page_write(cache.v_pages, v, pidx, slot),
+    )
+    C = Pseq * ps
+    kg = new_cache.k_pages[block_tables].reshape(B, C, *k.shape[2:])
+    vg = new_cache.v_pages[block_tables].reshape(B, C, *v.shape[2:])
+    tok = jnp.arange(C, dtype=jnp.int32)[None, :]
+    valid = tok <= pos[:, None]
+    if window is not None:
+        valid &= (pos[:, None] - tok) < window
+    out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype),
+                jnp.zeros((1,), jnp.int32), jnp.zeros((C,), jnp.int32),
+                causal=False, window=None, soft_cap=a.logit_soft_cap,
+                k_valid=valid)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def paged_mla_prefill(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                      positions: jax.Array, length: jax.Array,
+                      cache: PagedMLACache, block_tables: jax.Array,
+                      inv_freq: Optional[jax.Array],
+                      ) -> Tuple[jax.Array, PagedMLACache]:
+    """:func:`mla_prefill` math with the latent write paged."""
+    m = a.mla
+    B, S, _ = x.shape
+    H = a.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if inv_freq is not None:
+        q_rope = apply_rope(q_rope, positions, inv_freq)
+    c_kv, k_rope = _mla_latents(p, a, x, positions, inv_freq)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = sdpa(q_full, k_full, v, positions, positions, causal=True)
+    ps = cache.page_size
+    num_pages = cache.ckv_pages.shape[0] - 1
+    pages, slots = prefill_page_ids(block_tables, positions, length, ps,
+                                    num_pages)
+    new_cache = PagedMLACache(
+        ckv_pages=_page_write(cache.ckv_pages, c_kv, pages, slots),
+        krope_pages=_page_write(cache.krope_pages, k_rope, pages, slots),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def paged_mla_decode(p: Dict[str, Any], a: AttentionConfig, x: jax.Array,
+                     pos: jax.Array, cache: PagedMLACache,
+                     block_tables: jax.Array,
+                     inv_freq: Optional[jax.Array],
+                     ) -> Tuple[jax.Array, PagedMLACache]:
+    """Absorbed MLA decode over the paged latent cache; per-row ``pos``
+    (B,), math mirrors :func:`mla_decode`."""
+    m = a.mla
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if inv_freq is not None:
+        q_rope = apply_rope(q_rope, pos[:, None], inv_freq)
+    c_new, kr_new = _mla_latents(p, a, x, pos[:, None], inv_freq)
+    ps = cache.page_size
+    Pseq = block_tables.shape[1]
+    pidx = jnp.take_along_axis(block_tables, (pos // ps)[:, None], axis=1)
+    slot = (pos % ps)[:, None]
+    cache = PagedMLACache(
+        ckv_pages=_page_write(cache.ckv_pages, c_new, pidx, slot),
+        krope_pages=_page_write(cache.krope_pages, kr_new, pidx, slot),
+    )
+    C = Pseq * ps
+    c_kv = cache.ckv_pages[block_tables].reshape(B, C, -1).astype(x.dtype)
+    k_rope = cache.krope_pages[block_tables].reshape(B, C, -1).astype(x.dtype)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_nope = jnp.einsum("bshr,bcr->bhsc", q_c, c_kv)
+    s_rope = jnp.einsum("bshr,bcr->bhsc", q_rope, k_rope)
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    tok = jnp.arange(C, dtype=jnp.int32)[None, :]
+    valid = (tok <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhsc,bcr->bshr", probs, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2) forward + absorbed decode
 # ---------------------------------------------------------------------------
 

@@ -31,6 +31,11 @@ class ModelApi(NamedTuple):
     # inherently recurrent families (the engine falls back to a fused
     # scan-over-decode program there)
     prefill: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    # paged-cache path (block-table pool); transformer families only —
+    # recurrent/hybrid state is O(1) per sequence, paging buys nothing
+    init_paged_cache: Optional[Callable[[int, int], Any]] = None
+    paged_prefill: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    paged_decode_step: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
 
 
 def _extra(batch: Dict[str, jax.Array], m: ModelConfig):
@@ -95,10 +100,23 @@ def make_model(cfg: ArchConfig) -> ModelApi:
                    if cfg.run.cache_dtype else None)
 
     prefill = None
+    init_paged_cache = paged_prefill = paged_decode_step = None
     if mod is transformer:
         def prefill(params, tokens, cache, length=None, **kw):
             return transformer.prefill(params, m, tokens, cache,
                                        length=length, **kw)
+
+        def init_paged_cache(num_pages, page_size):
+            return transformer.init_paged_cache(m, num_pages, page_size,
+                                                dtype=cache_dtype)
+
+        def paged_prefill(params, tokens, cache, block_tables, length=None):
+            return transformer.paged_prefill(params, m, tokens, cache,
+                                             block_tables, length=length)
+
+        def paged_decode_step(params, tokens, pos, cache, block_tables):
+            return transformer.paged_decode_step(params, m, tokens, pos,
+                                                 cache, block_tables)
 
     return ModelApi(
         cfg=cfg,
@@ -108,4 +126,7 @@ def make_model(cfg: ArchConfig) -> ModelApi:
         init_cache=lambda b, n: mod.init_cache(m, b, n, dtype=cache_dtype),
         decode_step=decode,
         prefill=prefill,
+        init_paged_cache=init_paged_cache,
+        paged_prefill=paged_prefill,
+        paged_decode_step=paged_decode_step,
     )

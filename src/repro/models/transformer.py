@@ -312,6 +312,154 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache,
     return logits_from_hidden(params, cfg, x), new_cache
 
 
+# ---------------------------------------------------------------------------
+# paged cache + paged prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None):
+    """Paged cache for every layer.  Unlike :func:`init_cache` the
+    geometry is uniform by construction — windowed layers are handled by
+    masking at score time, not by smaller rings — so the layer stack
+    always scans, gemma3 included.  Page arrays are shared across
+    sequences; per-layer arrays are stacked along a leading layer axis
+    and indexed by the same pool-issued page ids."""
+    if dtype is None:
+        from repro.models.common import to_dtype
+        dtype = to_dtype(cfg.dtype)
+    a = cfg.attention
+
+    def one():
+        if a.kind == "mla":
+            return attn.init_paged_mla_cache(num_pages, page_size, a, dtype)
+        return attn.init_paged_kv_cache(num_pages, page_size,
+                                        a.num_kv_heads, a.head_dim, dtype)
+
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    lead = {str(i): one() for i in range(n_lead)}
+    per = [one() for _ in range(cfg.num_layers - n_lead)]
+    stackedc = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return {"lead": lead, "layers": stackedc}
+
+
+def _layer_paged_prefill(cfg, p, x, positions, length, cache, block_tables,
+                         inv_freq, window, moe_layer):
+    a = cfg.attention
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    if a.kind == "mla":
+        y, cache = attn.paged_mla_prefill(p["attn"], a, h, positions,
+                                          length, cache, block_tables,
+                                          inv_freq)
+    else:
+        y, cache = attn.paged_gqa_prefill(p["attn"], a, h, positions,
+                                          length, cache, block_tables,
+                                          inv_freq, window=window)
+    x = x + y
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if moe_layer:
+        y, _ = apply_moe(p["moe"], cfg.moe, h, cfg.act)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def paged_prefill(params, cfg: ModelConfig, tokens: jax.Array, cache,
+                  block_tables: jax.Array, length=None):
+    """One-shot prefill through the block table: same full-sequence math
+    as :func:`prefill`, cache writes scattered into pool pages.  ``tokens``
+    (B,S) right-padded past ``length``; ``block_tables`` (B, pages_per_seq)
+    pool page ids.  Returns (logits (B,S,V), new paged cache)."""
+    if length is None:
+        length = tokens.shape[1]
+    length = jnp.asarray(length, jnp.int32)
+    x = embed_tokens(params, cfg, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.attention.rope_theta == 0.0:
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    moe_layer = cfg.moe is not None
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    new_lead = {}
+    for i in range(n_lead):
+        x, c = _layer_paged_prefill(cfg, params["lead"][str(i)], x,
+                                    positions, length, cache["lead"][str(i)],
+                                    block_tables, stacked_rope(cfg, [i])[0],
+                                    jnp.int32(layer_window(cfg, i)), False)
+        new_lead[str(i)] = c
+    rest = list(range(n_lead, cfg.num_layers))
+    inv_freqs = stacked_rope(cfg, rest)
+    windows = stacked_windows(cfg, rest)
+
+    def body(x_c, xs):
+        p, c, ifr, win = xs
+        xo, c2 = _layer_paged_prefill(cfg, p, x_c, positions, length, c,
+                                      block_tables, ifr, win, moe_layer)
+        return xo, c2
+
+    x, new_stack = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"], inv_freqs, windows))
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), \
+        {"lead": new_lead, "layers": new_stack}
+
+
+def _layer_paged_decode(cfg, p, x, pos, cache, block_tables, inv_freq,
+                        window, moe_layer):
+    a = cfg.attention
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    if a.kind == "mla":
+        y, cache = attn.paged_mla_decode(p["attn"], a, h, pos, cache,
+                                         block_tables, inv_freq)
+    else:
+        y, cache = attn.paged_gqa_decode(p["attn"], a, h, pos, cache,
+                                         block_tables, inv_freq,
+                                         window=window)
+    x = x + y
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if moe_layer:
+        y, _ = apply_moe(p["moe"], cfg.moe, h, cfg.act)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def paged_decode_step(params, cfg: ModelConfig, tokens: jax.Array,
+                      pos: jax.Array, cache, block_tables: jax.Array):
+    """Batched paged decode: one program advances every live sequence.
+    ``tokens`` (B,1); ``pos`` (B,) per-row absolute positions (free rows
+    point their block table at the scratch page and are ignored by the
+    caller).  Returns (logits (B,1,V), new paged cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.attention.rope_theta == 0.0:
+        sp = jax.vmap(lambda po: sinusoidal_positions(1, cfg.d_model,
+                                                      offset=po))(pos)
+        x = x + sp.astype(x.dtype)
+    moe_layer = cfg.moe is not None
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    new_lead = {}
+    for i in range(n_lead):
+        x, c = _layer_paged_decode(cfg, params["lead"][str(i)], x, pos,
+                                   cache["lead"][str(i)], block_tables,
+                                   stacked_rope(cfg, [i])[0],
+                                   jnp.int32(layer_window(cfg, i)), False)
+        new_lead[str(i)] = c
+    rest = list(range(n_lead, cfg.num_layers))
+    inv_freqs = stacked_rope(cfg, rest)
+    windows = stacked_windows(cfg, rest)
+
+    def body(x_c, xs):
+        p, c, ifr, win = xs
+        xo, c2 = _layer_paged_decode(cfg, p, x_c, pos, c, block_tables,
+                                     ifr, win, moe_layer)
+        return xo, c2
+
+    x, new_stack = jax.lax.scan(
+        body, x, (params["layers"], cache["layers"], inv_freqs, windows))
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), \
+        {"lead": new_lead, "layers": new_stack}
+
+
 def _layer_decode(cfg, p, x, pos, cache, inv_freq, window, moe_layer):
     a = cfg.attention
     h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)

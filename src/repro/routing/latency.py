@@ -95,14 +95,28 @@ class LatencyModel:
         ``decode_tokens`` is the per-request generation length the
         simulator should assume; 0 means prefill-only service (the
         paper's GRU: one forward per request).  Extra ``kwargs`` override
-        the network RTT fields."""
-        service, slots = {}, {}
+        the network RTT fields.
+
+        Measurements carrying an ``occupancy_ms`` sweep (``measure(...,
+        occupancy_levels=...)``) additionally yield a *measured* service
+        curve: per-request service interpolated between the swept
+        concurrency levels instead of the closed-form ``(occ+1)/slots``
+        stretch — real high-occupancy points from the paged engines
+        rather than extrapolation past the dense slot boundary."""
+        service, slots, sweep = {}, {}, {}
         for tier, m in measurements.items():
             service[tier] = float(m.prefill_ms
                                   + decode_tokens * m.decode_ms_per_token)
             slots[tier] = int(m.batch_size)
+            occ = tuple(getattr(m, "occupancy_ms", ()) or ())
+            if occ and decode_tokens > 0:
+                pts = sorted(
+                    (int(lvl), float(m.prefill_ms + decode_tokens * ms))
+                    for lvl, ms in occ)
+                sweep[tier] = tuple(pts)
         return CalibratedLatencyModel(tier_service_ms=service,
-                                      tier_slots=slots, **kwargs)
+                                      tier_slots=slots, tier_sweep=sweep,
+                                      **kwargs)
 
 
 @dataclass(frozen=True)
@@ -117,8 +131,16 @@ class CalibratedLatencyModel(LatencyModel):
     a partially calibrated pool still simulates."""
     tier_service_ms: Dict[str, float] = field(default_factory=dict)
     tier_slots: Dict[str, int] = field(default_factory=dict)
+    # measured occupancy sweep per tier: ((concurrency, service_ms), ...)
+    # ascending in concurrency; empty -> closed-form stretch
+    tier_sweep: Dict[str, tuple] = field(default_factory=dict)
 
     def infer_ms(self, tier: str, occupancy: float = 0.0) -> float:
+        if self.tier_sweep.get(tier):
+            # route through the array path so scalar and vectorized
+            # lookups are bit-identical (occupancy_replay contract)
+            return float(self.infer_ms_array(
+                tier, np.asarray(occupancy, dtype=np.float64)))
         base = self.tier_service_ms.get(tier)
         if base is None:
             return super().infer_ms(tier, occupancy)
@@ -127,22 +149,37 @@ class CalibratedLatencyModel(LatencyModel):
         return base * oversubscription
 
     def occupancy_dependent(self, tier: str) -> bool:
-        return tier in self.tier_service_ms
+        return tier in self.tier_service_ms or tier in self.tier_sweep
 
     def flat_service_slots(self, tier: str) -> float:
-        """Continuous-batching slot count of a measured tier: occupancy
-        below it serves at the flat measured rate, at or above it the
-        ``(occupancy + 1) / slots`` stretch kicks in.  Unmeasured tiers
-        inherit the constant model's ``inf``."""
+        """Occupancy boundary of the flat service regime.  With a
+        measured sweep: the lowest swept concurrency level (occupancies
+        below it interpolate to the level's own flat value, so the
+        closed-form bulk replay stays exact).  Without: the
+        continuous-batching slot count where the ``(occupancy + 1) /
+        slots`` stretch kicks in.  Unmeasured tiers inherit the constant
+        model's ``inf``."""
+        sweep = self.tier_sweep.get(tier)
+        if sweep:
+            return float(sweep[0][0])
         if tier not in self.tier_service_ms:
             return super().flat_service_slots(tier)
         return float(max(self.tier_slots.get(tier, 1), 1))
 
     def infer_ms_array(self, tier: str, occupancy: np.ndarray,
                        ) -> np.ndarray:
+        occupancy = np.asarray(occupancy, dtype=np.float64)
+        sweep = self.tier_sweep.get(tier)
+        if sweep:
+            levels = np.asarray([s[0] for s in sweep], np.float64)
+            svc = np.asarray([s[1] for s in sweep], np.float64)
+            c = occupancy + 1.0
+            out = np.interp(c, levels, svc)   # clamps flat below levels[0]
+            # beyond the highest measured level: time-share the last
+            # measured rate (same shape as the closed-form stretch)
+            return np.where(c > levels[-1], svc[-1] * c / levels[-1], out)
         base = self.tier_service_ms.get(tier)
         if base is None:
             return super().infer_ms_array(tier, occupancy)
         slots = max(self.tier_slots.get(tier, 1), 1)
-        occupancy = np.asarray(occupancy, dtype=np.float64)
         return base * np.maximum((occupancy + 1.0) / slots, 1.0)

@@ -13,12 +13,16 @@ from repro.serving.workload import (RequestEvent, batched_arrivals,
 
 _LAZY = {
     "EngineMeasurement": "repro.serving.engine",
+    "PagedServeEngine": "repro.serving.engine",
     "ServeEngine": "repro.serving.engine",
     "bucket_len": "repro.serving.engine",
+    "PagePool": "repro.serving.page_pool",
+    "PagesExhausted": "repro.serving.page_pool",
     "DEFAULT_TIERS": "repro.serving.replica",
     "ReplicaPool": "repro.serving.replica",
     "TierSpec": "repro.serving.replica",
     "lm_tiers": "repro.serving.replica",
+    "paged_lm_tiers": "repro.serving.replica",
     "ContinuousBatchingScheduler": "repro.serving.scheduler",
     "Request": "repro.serving.scheduler",
     "ScheduleStats": "repro.serving.scheduler",

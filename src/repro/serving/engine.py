@@ -1,16 +1,21 @@
-"""Serving engine: one-shot jitted prefill + slot-based continuous-batching
-decode over the unified model API.
+"""Serving engines: one-shot jitted prefill + continuous-batching decode
+over the unified model API.
 
-The engine owns a fixed number of *slots* (``batch_size``).  Each slot
-holds one in-flight sequence: its KV/state cache, absolute position and
-next input token.  Admission runs a single jitted **prefill** program
-(full-sequence forward writing the cache in one scatter — see
-``transformer.prefill``), or, for the inherently recurrent families
-(ssm / hybrid / audio), a fused ``lax.scan`` over decode steps compiled
-into one program.  All active slots then share ONE jitted decode program
-(``decode_step`` vmapped over slots with per-slot positions), so
-heterogeneous Poisson arrivals genuinely batch together: a sequence can be
-admitted into slot 3 while slot 0 is 400 tokens into its generation.
+:class:`ServeEngine` owns a fixed number of *slots* (``batch_size``), each
+with a private dense ``max_len`` cache: admission prefills into a slot,
+all active slots share ONE jitted decode program (``decode_step`` vmapped
+over slots with per-slot positions), so heterogeneous Poisson arrivals
+genuinely batch together.  Concurrency is capped by worst-case sequence
+length: ``batch_size`` dense caches must fit in HBM whether or not the
+sequences use them.
+
+:class:`PagedServeEngine` replaces the per-slot reservation with a shared
+:class:`~repro.serving.page_pool.PagePool`: sequences hold
+``ceil(tokens / page_size)`` pages, admission is gated on *pages*, decode
+extends page-by-page and eviction reclaims.  At equal cache HBM this
+lifts max concurrency by roughly ``max_len / (prompt + reserve)`` — the
+regime the calibration bridge (``measure`` occupancy sweep →
+``LatencyModel.from_measurements``) needs real points in.
 
 The seed token-by-token prompt path is kept as ``generate_sequential`` —
 it is the baseline that ``benchmarks/perf_serving_scheduler.py`` measures
@@ -19,8 +24,9 @@ the prefill path against.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import Any, Deque, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +34,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import make_model
+from repro.serving.page_pool import PagePool
 from repro.telemetry import Telemetry, maybe as _maybe_tel
 
 
@@ -47,9 +54,13 @@ class EngineMeasurement:
     ``LatencyModel.from_measurements`` (routing/latency.py)."""
     prefill_ms: float              # one admission of a prompt_len prompt
     decode_ms_per_token: float     # one continuous-batching step
-    batch_size: int                # slots sharing the decode program
+    batch_size: int                # max concurrent sequences
     prompt_len: int
     decode_steps: int
+    # occupancy sweep: ((concurrency, decode_ms_per_step), ...) measured
+    # at increasing admitted-sequence counts — real high-occupancy points
+    # for the latency model instead of extrapolation past batch_size
+    occupancy_ms: Tuple[Tuple[int, float], ...] = ()
 
 
 class ServeEngine:
@@ -75,7 +86,8 @@ class ServeEngine:
             template)
         self.pos = jnp.zeros((batch_size,), jnp.int32)
         self.next_tok = jnp.zeros((batch_size, 1, 1), jnp.int32)
-        self.free_slots: List[int] = list(range(batch_size))
+        self.free_slots: Deque[int] = deque(range(batch_size))
+        self._free_set: Set[int] = set(range(batch_size))
 
         self._decode = jax.jit(
             jax.vmap(self._slot_decode, in_axes=(None, 0, 0, 0)))
@@ -126,11 +138,23 @@ class ServeEngine:
     # -- slot management ----------------------------------------------------
 
     def acquire_slot(self) -> Optional[int]:
-        return self.free_slots.pop(0) if self.free_slots else None
+        if not self.free_slots:
+            return None
+        slot = self.free_slots.popleft()
+        self._free_set.discard(slot)
+        return slot
 
-    def admit(self, prompt, slot: int) -> int:
+    def can_admit(self, prompt_len: int, max_new_tokens: int = 0) -> bool:
+        """Dense admission is slot-gated only: every slot already owns a
+        worst-case ``max_len`` cache."""
+        return bool(self.free_slots)
+
+    def admit(self, prompt, slot: int,
+              reserve_tokens: Optional[int] = None) -> int:
         """Prefill ``prompt`` (S,) into ``slot``.  Returns the first
-        generated (greedy) token."""
+        generated (greedy) token.  ``reserve_tokens`` is accepted for
+        signature parity with :class:`PagedServeEngine` (a dense slot
+        always reserves ``max_len``)."""
         if self._tel is not None:
             with self._tel.tracer.wall("serve.admit", cat="serving",
                                        slot=int(slot)):
@@ -151,17 +175,21 @@ class ServeEngine:
         self.cache = self._insert(self.cache, slot_cache, jnp.int32(slot))
         self.pos = self.pos.at[slot].set(S)
         self.next_tok = self.next_tok.at[slot, 0, 0].set(first[0])
-        if slot in self.free_slots:
+        if slot in self._free_set:
+            self._free_set.discard(slot)
             self.free_slots.remove(slot)
         return int(first[0])
 
     def evict(self, slot: int) -> None:
         """Release a slot.  Its stale cache is simply overwritten by the
-        next admission — no device work."""
-        if slot not in self.free_slots:
-            self.free_slots.append(slot)
-            if self._tel is not None:
-                self._tel.metrics.counter("serve.evictions").inc()
+        next admission — no device work.  Double eviction raises: a slot
+        freed twice means two sequences believed they owned it."""
+        if slot in self._free_set:
+            raise ValueError(f"slot {slot} is already free (double evict)")
+        self.free_slots.append(slot)
+        self._free_set.add(slot)
+        if self._tel is not None:
+            self._tel.metrics.counter("serve.evictions").inc()
 
     @property
     def active_slots(self) -> int:
@@ -231,9 +259,14 @@ class ServeEngine:
     # -- calibration --------------------------------------------------------
 
     def measure(self, prompt_len: int = 64, decode_steps: int = 16,
-                seed: int = 0) -> EngineMeasurement:
+                seed: int = 0,
+                occupancy_levels: Optional[Sequence[int]] = None,
+                ) -> EngineMeasurement:
         """Measure wall-clock prefill and continuous-batching step times
-        (after a warmup pass that triggers compilation).
+        (after a warmup pass that triggers compilation).  With
+        ``occupancy_levels`` also sweeps decode step time at increasing
+        admitted-sequence counts (levels above the slot budget are
+        skipped).
 
         Safe to call mid-serving: the engine's slot state (caches,
         positions, pending tokens) is snapshotted before and restored
@@ -243,11 +276,13 @@ class ServeEngine:
             with self._tel.tracer.wall("serve.measure", cat="serving",
                                        prompt_len=int(prompt_len),
                                        decode_steps=int(decode_steps)):
-                return self._measure_impl(prompt_len, decode_steps, seed)
-        return self._measure_impl(prompt_len, decode_steps, seed)
+                return self._measure_impl(prompt_len, decode_steps, seed,
+                                          occupancy_levels)
+        return self._measure_impl(prompt_len, decode_steps, seed,
+                                  occupancy_levels)
 
-    def _measure_impl(self, prompt_len: int, decode_steps: int,
-                      seed: int) -> EngineMeasurement:
+    def _measure_impl(self, prompt_len: int, decode_steps: int, seed: int,
+                      occupancy_levels) -> EngineMeasurement:
         saved = (self.cache, self.pos, self.next_tok,
                  list(self.free_slots))
         rng = np.random.default_rng(seed)
@@ -265,10 +300,283 @@ class ServeEngine:
                 self.decode()
             decode_ms = (time.perf_counter() - t0) * 1e3 \
                 / max(decode_steps, 1)
+            sweep = self._occupancy_sweep(occupancy_levels, prompt,
+                                          decode_steps)
         finally:
-            self.cache, self.pos, self.next_tok, self.free_slots = saved
+            self.cache, self.pos, self.next_tok = saved[:3]
+            self.free_slots = deque(saved[3])
+            self._free_set = set(saved[3])
         return EngineMeasurement(prefill_ms=prefill_ms,
                                  decode_ms_per_token=decode_ms,
                                  batch_size=self.batch_size,
                                  prompt_len=prompt_len,
-                                 decode_steps=decode_steps)
+                                 decode_steps=decode_steps,
+                                 occupancy_ms=sweep)
+
+    def _occupancy_sweep(self, levels, prompt,
+                         decode_steps: int) -> Tuple[Tuple[int, float], ...]:
+        """Admit up to each requested concurrency level and time decode
+        steps there.  Shared by both engines: only ``can_admit`` differs
+        (slots vs pages), which is exactly the boundary the sweep probes."""
+        if not levels:
+            return ()
+        out = []
+        for lvl in sorted(set(int(v) for v in levels)):
+            while self.active_slots < lvl \
+                    and self.can_admit(len(prompt), decode_steps):
+                s = self.acquire_slot()
+                if s is None:
+                    break
+                self.admit(prompt, slot=s, reserve_tokens=decode_steps)
+            if self.active_slots < lvl:
+                break                       # slot/page budget exhausted
+            t0 = time.perf_counter()
+            for _ in range(decode_steps):
+                self.decode()
+            ms = (time.perf_counter() - t0) * 1e3 / max(decode_steps, 1)
+            out.append((lvl, ms))
+        return tuple(out)
+
+
+class PagedServeEngine:
+    """Continuous batching over a shared paged cache.
+
+    Rows (``max_seqs`` of them) are just batch positions in the single
+    batched decode program; the cache behind them is a page pool shared
+    by every live sequence.  Admission allocates ``prompt_len +
+    reserve_tokens`` worth of pages (raising the effective concurrency to
+    however many *actual* tokens fit, instead of ``HBM / max_len``),
+    decode extends page-by-page as sequences cross page boundaries, and
+    eviction returns pages to the pool.
+
+    Free rows point their whole block table at a scratch page (id
+    ``num_pages`` — the page arrays carry one extra page for this) so the
+    batched write lands somewhere harmless; their outputs are ignored.
+
+    Greedy outputs are token-for-token identical to :class:`ServeEngine`:
+    the paged attention math mirrors the dense path exactly (same
+    projections, rope, mask, softmax — only the cache addressing
+    differs)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, max_seqs: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 max_len: Optional[int] = None, reserve_tokens: int = 16,
+                 telemetry: Optional[Telemetry] = None):
+        self.cfg = cfg
+        self._tel = _maybe_tel(telemetry)
+        self.api = make_model(cfg)
+        if self.api.paged_prefill is None:
+            raise ValueError(
+                f"{cfg.name}: family {cfg.model.family!r} has no paged "
+                "cache path (recurrent state is O(1) per sequence — use "
+                "ServeEngine)")
+        self.params = params
+        self.batch_size = max_seqs        # scheduler-facing name
+        self.max_seqs = max_seqs
+        self.max_len = max_len or cfg.run.max_cache_len
+        self.page_size = int(page_size)
+        self.pages_per_seq = -(-self.max_len // self.page_size)
+        # default budget = what ONE dense slot-engine of the same
+        # (max_seqs, max_len) would reserve, so paged-vs-dense comparisons
+        # at equal HBM are the default configuration
+        self.num_pages = int(num_pages or max_seqs * self.pages_per_seq)
+        self.reserve_tokens = int(reserve_tokens)
+        self.pool = PagePool(self.num_pages, self.page_size,
+                             telemetry=telemetry)
+        self.cache = self.api.init_paged_cache(self.num_pages,
+                                               self.page_size)
+        self.scratch_page = self.num_pages
+        self._block_tables = np.full((max_seqs, self.pages_per_seq),
+                                     self.scratch_page, np.int32)
+        self._pos = np.zeros((max_seqs,), np.int32)
+        self._next_tok = np.zeros((max_seqs, 1), np.int32)
+        self.free_slots: Deque[int] = deque(range(max_seqs))
+        self._free_set: Set[int] = set(range(max_seqs))
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- jitted programs ----------------------------------------------------
+
+    def _decode_impl(self, params, toks, pos, cache, block_tables):
+        logits, cache = self.api.paged_decode_step(params, toks, pos,
+                                                   cache, block_tables)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+
+    def _prefill_impl(self, params, tokens, length, cache, block_table):
+        logits, cache = self.api.paged_prefill(params, tokens, cache,
+                                               block_table, length=length)
+        last = logits[:, length - 1, :]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+
+    # -- admission ----------------------------------------------------------
+
+    def acquire_slot(self) -> Optional[int]:
+        if not self.free_slots:
+            return None
+        slot = self.free_slots.popleft()
+        self._free_set.discard(slot)
+        return slot
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int = 0) -> bool:
+        """True when a row is free AND the pool can hold the prompt plus
+        the decode reservation."""
+        need = prompt_len + max(int(max_new_tokens), self.reserve_tokens)
+        return bool(self.free_slots) and self.pool.can_allocate(need)
+
+    def admit(self, prompt, slot: int,
+              reserve_tokens: Optional[int] = None) -> int:
+        """Allocate pages for ``prompt`` plus ``reserve_tokens`` of decode
+        headroom (engine default when None), prefill through the block
+        table, return the first greedy token.  Raises
+        :class:`~repro.serving.page_pool.PagesExhausted` when the pool
+        cannot hold the sequence."""
+        if self._tel is not None:
+            with self._tel.tracer.wall("serve.admit", cat="serving",
+                                       slot=int(slot)):
+                first = self._admit_impl(prompt, slot, reserve_tokens)
+            self._tel.metrics.counter("serve.admissions").inc()
+            return first
+        return self._admit_impl(prompt, slot, reserve_tokens)
+
+    def _admit_impl(self, prompt, slot: int,
+                    reserve_tokens: Optional[int]) -> int:
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        S = prompt.shape[1]
+        if S > self.max_len:
+            raise ValueError(f"prompt ({S}) exceeds max_len {self.max_len}")
+        reserve = self.reserve_tokens if reserve_tokens is None \
+            else int(reserve_tokens)
+        reserved = min(S + max(reserve, 1), self.max_len)
+        table = self.pool.allocate(slot, reserved)
+        row = np.full((self.pages_per_seq,), self.scratch_page, np.int32)
+        row[:len(table)] = table
+        self._block_tables[slot] = row
+        Sb = bucket_len(S)
+        padded = jnp.zeros((1, Sb), jnp.int32).at[:, :S].set(prompt)
+        first, self.cache = self._prefill(
+            self.params, padded, jnp.int32(S), self.cache,
+            jnp.asarray(row[None]))
+        self._pos[slot] = S
+        self._next_tok[slot, 0] = int(first[0])
+        if slot in self._free_set:
+            self._free_set.discard(slot)
+            self.free_slots.remove(slot)
+        return int(first[0])
+
+    def evict(self, slot: int) -> None:
+        """Return the row's pages to the pool.  Double eviction raises —
+        silently re-freeing would hand the same pages to two sequences."""
+        if slot in self._free_set:
+            raise ValueError(f"slot {slot} is already free (double evict)")
+        self.pool.release(slot)
+        self._block_tables[slot] = self.scratch_page
+        self._pos[slot] = 0
+        self._next_tok[slot] = 0
+        self.free_slots.append(slot)
+        self._free_set.add(slot)
+        if self._tel is not None:
+            self._tel.metrics.counter("serve.evictions").inc()
+
+    @property
+    def active_slots(self) -> int:
+        return self.max_seqs - len(self.free_slots)
+
+    # -- decode -------------------------------------------------------------
+
+    def decode(self) -> np.ndarray:
+        """One continuous-batching step: every live row advances one
+        token through the shared paged cache in a single program.
+        Extends page allocations for rows whose next token crosses their
+        reservation (raises ``PagesExhausted`` if the pool is dry — gate
+        admissions with ``can_admit(prompt_len, max_new_tokens)`` to
+        guarantee completion headroom).  Returns (max_seqs,) token ids
+        (free-row entries are meaningless)."""
+        for slot in range(self.max_seqs):
+            if slot in self._free_set:
+                continue
+            needed = int(self._pos[slot]) + 1
+            if needed > self.pool.length(slot):
+                self.pool.extend(slot, needed)
+                table = self.pool.block_table(slot)
+                self._block_tables[slot, :len(table)] = table
+        toks, self.cache = self._decode(
+            self.params, jnp.asarray(self._next_tok),
+            jnp.asarray(self._pos), self.cache,
+            jnp.asarray(self._block_tables))
+        toks = np.asarray(toks)
+        for slot in range(self.max_seqs):
+            if slot not in self._free_set:
+                self._pos[slot] += 1
+                self._next_tok[slot, 0] = toks[slot]
+        if self._tel is not None:
+            self._tel.metrics.counter("serve.decode_steps").inc()
+        return toks
+
+    # -- convenience generation ---------------------------------------------
+
+    def generate(self, prompt_tokens: jax.Array, steps: int) -> jax.Array:
+        """Greedy generation — same contract and token stream as
+        :meth:`ServeEngine.generate`."""
+        B, S = prompt_tokens.shape
+        if B > self.max_seqs:
+            raise ValueError(f"batch {B} exceeds {self.max_seqs} rows")
+        if self.active_slots:
+            raise RuntimeError(
+                "engine has active sequences; drive mixed workloads "
+                "through ContinuousBatchingScheduler")
+        slots = [self.acquire_slot() for _ in range(B)]
+        first = [self.admit(prompt_tokens[b], slot=s, reserve_tokens=steps)
+                 for b, s in enumerate(slots)]
+        out = [np.asarray(first, np.int32)]
+        for _ in range(steps - 1):
+            toks = self.decode()
+            out.append(toks[np.asarray(slots)])
+        for s in slots:
+            self.evict(s)
+        return jnp.asarray(np.stack(out, axis=1))
+
+    # -- calibration --------------------------------------------------------
+
+    measure = ServeEngine.measure
+    _occupancy_sweep = ServeEngine._occupancy_sweep
+
+    def _measure_impl(self, prompt_len: int, decode_steps: int, seed: int,
+                      occupancy_levels) -> EngineMeasurement:
+        saved = (self.cache, self._pos.copy(), self._next_tok.copy(),
+                 self._block_tables.copy(), list(self.free_slots),
+                 self.pool.snapshot())
+        rng = np.random.default_rng(seed)
+        vocab = max(self.cfg.model.vocab_size, 2)
+        prompt = rng.integers(0, vocab, (prompt_len,))
+        try:
+            slot = self.acquire_slot()
+            if slot is None:
+                raise RuntimeError("measure() needs at least one free row")
+            self.admit(prompt, slot=slot,
+                       reserve_tokens=decode_steps)     # warmup prefill
+            self.decode()                               # warmup decode
+            self.evict(slot)
+            slot = self.acquire_slot()
+            t0 = time.perf_counter()
+            self.admit(prompt, slot=slot, reserve_tokens=decode_steps)
+            prefill_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            for _ in range(decode_steps):
+                self.decode()
+            decode_ms = (time.perf_counter() - t0) * 1e3 \
+                / max(decode_steps, 1)
+            sweep = self._occupancy_sweep(occupancy_levels, prompt,
+                                          decode_steps)
+        finally:
+            self.cache = saved[0]
+            self._pos, self._next_tok, self._block_tables = saved[1:4]
+            self.free_slots = deque(saved[4])
+            self._free_set = set(saved[4])
+            self.pool.restore(saved[5])
+        return EngineMeasurement(prefill_ms=prefill_ms,
+                                 decode_ms_per_token=decode_ms,
+                                 batch_size=self.max_seqs,
+                                 prompt_len=prompt_len,
+                                 decode_steps=decode_steps,
+                                 occupancy_ms=sweep)

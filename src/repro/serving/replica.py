@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import make_model
-from repro.serving.engine import EngineMeasurement, ServeEngine
+from repro.serving.engine import (EngineMeasurement, PagedServeEngine,
+                                  ServeEngine)
 
 TIERS = ("device", "edge", "cloud")
 
@@ -35,10 +36,15 @@ TIERS = ("device", "edge", "cloud")
 class TierSpec:
     tier: str                        # device | edge | cloud
     arch: str = "gru-traffic"        # config-registry name
-    batch_size: int = 1              # engine slots = concurrency cap
+    batch_size: int = 1              # engine rows = concurrency cap
     max_len: int = 256
     reduced: bool = True             # CPU-sized config variant
     replicas: int = 1                # replicas behind this tier
+    # paged cache (transformer families only): batch_size rows share a
+    # PagePool instead of each reserving a dense max_len cache
+    paged: bool = False
+    page_size: int = 16
+    num_pages: Optional[int] = None  # default: batch_size * ceil(max_len/ps)
 
 
 # the paper serves ONE model from every tier; the tiers differ in
@@ -56,6 +62,25 @@ def lm_tiers(arch: str = "xlstm-125m", max_len: int = 256,
     return (TierSpec("device", arch=arch, batch_size=1, max_len=max_len),
             TierSpec("edge", arch=arch, batch_size=4, max_len=max_len),
             TierSpec("cloud", arch=arch, batch_size=8, max_len=max_len))
+
+
+def paged_lm_tiers(arch: str = "stablelm-1.6b", max_len: int = 256,
+                   page_size: int = 16) -> Tuple[TierSpec, ...]:
+    """Paged tier layout: each tier keeps the SAME page budget a dense
+    tier of ``lm_tiers`` would hold (num_pages defaults to batch_size *
+    ceil(max_len / page_size) dense-equivalent pages) but admits by
+    actual token footprint, so row counts can be set far above the dense
+    slot counts."""
+    pages_dense = -(-max_len // page_size)
+    return (TierSpec("device", arch=arch, batch_size=4, max_len=max_len,
+                     paged=True, page_size=page_size,
+                     num_pages=1 * pages_dense),
+            TierSpec("edge", arch=arch, batch_size=16, max_len=max_len,
+                     paged=True, page_size=page_size,
+                     num_pages=4 * pages_dense),
+            TierSpec("cloud", arch=arch, batch_size=32, max_len=max_len,
+                     paged=True, page_size=page_size,
+                     num_pages=8 * pages_dense))
 
 
 class _RnnReplica:
@@ -124,6 +149,11 @@ class ReplicaPool:
             params, _ = api.init_params(jax.random.key(self.seed))
         if cfg.model.family == "rnn":
             return _RnnReplica(cfg, params)
+        if spec.paged:
+            return PagedServeEngine(cfg, params, max_seqs=spec.batch_size,
+                                    page_size=spec.page_size,
+                                    num_pages=spec.num_pages,
+                                    max_len=spec.max_len)
         return ServeEngine(cfg, params, batch_size=spec.batch_size,
                            max_len=spec.max_len)
 
@@ -134,7 +164,7 @@ class ReplicaPool:
 
     def engine(self, tier: str) -> ServeEngine:
         rep = self.replica(tier)
-        if not isinstance(rep, ServeEngine):
+        if not isinstance(rep, (ServeEngine, PagedServeEngine)):
             raise TypeError(f"tier {tier!r} serves a per-request model")
         return rep
 
@@ -152,9 +182,13 @@ class ReplicaPool:
     # -- calibration --------------------------------------------------------
 
     def measure(self, prompt_len: int = 64, decode_steps: int = 16,
+                occupancy_levels: Optional[Sequence[int]] = None,
                 ) -> Dict[str, EngineMeasurement]:
         """Per-tier wall-clock timings — feed the result to
-        ``LatencyModel.from_measurements``."""
+        ``LatencyModel.from_measurements``.  ``occupancy_levels`` sweeps
+        decode time at those admitted-sequence counts per tier (levels a
+        tier cannot reach are dropped), giving the latency model real
+        high-occupancy points."""
         out = {}
         for tier in self.specs:
             rep = self.replica(tier)
@@ -162,5 +196,6 @@ class ReplicaPool:
                 out[tier] = rep.measure(self.specs[tier].batch_size)
             else:
                 out[tier] = rep.measure(prompt_len=prompt_len,
-                                        decode_steps=decode_steps)
+                                        decode_steps=decode_steps,
+                                        occupancy_levels=occupancy_levels)
         return out

@@ -16,8 +16,6 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.engine import ServeEngine
-
 
 @dataclass
 class Request:
@@ -75,7 +73,9 @@ class ContinuousBatchingScheduler:
     """FIFO admission onto engine slots; decode advances all active slots
     together (the engine's single shared decode program)."""
 
-    def __init__(self, engine: ServeEngine):
+    def __init__(self, engine):
+        # engine: ServeEngine or PagedServeEngine (duck-typed: acquire_slot
+        # / can_admit / admit / decode / evict)
         self.engine = engine
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}      # slot -> request
@@ -90,15 +90,23 @@ class ContinuousBatchingScheduler:
     # -- one scheduling iteration ------------------------------------------
 
     def _admit_ready(self, now: float) -> float:
-        """Admit queued requests that have arrived, while slots are free.
+        """Admit queued requests that have arrived, while capacity lasts
+        (free slots for the dense engine; free slots AND pages for the
+        paged engine — ``can_admit`` reserves the request's full
+        ``max_new_tokens`` so an admitted sequence always completes).
         Returns the clock after the prefill wall time of each admission."""
         while self.queue and self.queue[0].arrival_s <= now:
+            head = self.queue[0]
+            if not self.engine.can_admit(len(head.prompt),
+                                         head.max_new_tokens):
+                break
             slot = self.engine.acquire_slot()
             if slot is None:
                 break
             req = self.queue.pop(0)
             t0 = time.perf_counter()
-            first = self.engine.admit(req.prompt, slot=slot)
+            first = self.engine.admit(req.prompt, slot=slot,
+                                      reserve_tokens=req.max_new_tokens)
             now += time.perf_counter() - t0
             req.slot = slot
             req.t_admitted = now
@@ -141,6 +149,13 @@ class ContinuousBatchingScheduler:
                     and self.queue[0].arrival_s > now:
                 now = self.queue[0].arrival_s        # idle: jump to arrival
             now = self._admit_ready(now)
+            if not self.active and self.queue \
+                    and self.queue[0].arrival_s <= now:
+                head = self.queue[0]
+                raise ValueError(
+                    f"request {head.id} (prompt {len(head.prompt)} + "
+                    f"{head.max_new_tokens} new) can never be admitted on "
+                    "an idle engine — it exceeds the engine's capacity")
             if self.active:
                 now = self._decode_once(now)
         return self.stats(duration_s=now)
