@@ -1,0 +1,226 @@
+"""Availability under chaos: the fault-domain benchmark.
+
+Runs the outage and domain-outage chaos scenarios against a fault-free
+baseline on the same seeded workload and reports, per scenario:
+
+  availability        fraction of arrivals served by the horizon
+                      (retries still pending when the run ends are the
+                      only requests ever unserved — nothing is lost)
+  p95_fault_ms        overall p95 with the chaos plan live
+  p95_clean_ms        same workload, no faults
+  recovery_s          time from the last crash/partition clearing to
+                      the 1 s-windowed p95 re-entering 1.2x the clean
+                      p95 (NaN-safe; capped at the horizon)
+  retry_amplification serve attempts per arrival (1.0 = no retries)
+
+and the **failover gate**: with tier failover ON (the default
+``RetryPolicy``: bounded attempts, then the cloud replica serves under
+``R4-failover``) at least half of the p95 degradation a *no-failover*
+policy suffers (requests back off until the fault clears) must be
+recovered:
+
+  recovered = p95_nofailover - p95_failover
+  gate:       recovered >= 0.5 * (p95_nofailover - p95_clean)
+
+  python -m benchmarks.perf_faults             # full (60 s horizon)
+  python -m benchmarks.perf_faults --smoke     # fast CI cell (40 s)
+"""
+from __future__ import annotations
+
+import argparse
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.sim.faults import DOWN_KINDS
+from repro.sim.scenarios import SCENARIOS, Scenario, run_scenario
+# after scenarios: request_plane is circular when imported first
+from repro.sim.request_plane import RetryPolicy
+
+from benchmarks.common import emit
+
+#: never fails over: requests retry with capped backoff until the
+#: fault clears — the degradation ceiling the gate measures against
+NO_FAILOVER = RetryPolicy(timeout_s=1e9, base_backoff_s=0.05,
+                          backoff_cap_s=0.8, max_attempts=1_000_000,
+                          jitter=0.5)
+
+RECOVERY_WINDOW_S = 1.0
+RECOVERY_CEIL = 1.2                # recovered when p95 <= ceil * clean
+GATE_FRACTION = 0.5
+
+
+def _with_retry(name: str, retry: Optional[RetryPolicy]) -> Scenario:
+    """The named chaos scenario with its plan intact but the request
+    plane's retry policy overridden (None keeps the default)."""
+    base = SCENARIOS[name]()
+
+    def inject(cosim):
+        orig = cosim.schedule_faults
+
+        def patched(plan, retry_arg=None, **kw):
+            return orig(plan, retry=retry, **kw)
+
+        cosim.schedule_faults = patched
+        try:
+            base.inject(cosim)
+        finally:
+            cosim.schedule_faults = orig
+
+    return Scenario(base.name, base.description, inject)
+
+
+def _capture(scenario: Scenario):
+    box: Dict[str, object] = {}
+
+    def inject(cosim):
+        box["cosim"] = cosim
+        scenario.inject(cosim)
+
+    return Scenario(scenario.name, scenario.description, inject), box
+
+
+def _down_windows(cosim):
+    """(start, end) spans of the crash/partition windows that ran."""
+    starts = {}
+    spans = []
+    for t, what, kind, edges in cosim.fault_log:
+        if kind not in DOWN_KINDS:
+            continue
+        if what == "start":
+            starts[(kind, edges)] = t
+        else:
+            t0 = starts.pop((kind, edges), None)
+            if t0 is not None:
+                spans.append((t0, t))
+    return spans
+
+
+def _p95_in_windows(log, spans) -> float:
+    """p95 latency over requests *in flight during a down window* —
+    the p95-under-failure metric.  The log records each request at its
+    final serve instant with the backoff wait folded into the latency,
+    so a request's span is ``[t - latency, t]``; masking on span
+    overlap charges a stranded request to the outage that stranded it
+    even though it logs only after the fault clears.  NaN when nothing
+    overlapped any window."""
+    if not spans:
+        return math.nan
+    t = np.asarray(log.t)
+    lat = np.asarray(log.latency_ms)
+    start = t - lat / 1000.0
+    mask = np.zeros(t.size, dtype=bool)
+    for t0, t1 in spans:
+        mask |= (start < t1) & (t >= t0)
+    if not mask.any():
+        return math.nan
+    return float(np.percentile(lat[mask], 95.0))
+
+
+def _peak_windowed_p95(log) -> float:
+    """Worst 1 s-windowed p95 of the run — the operational
+    worst-case service level.  Stranded requests all log in a burst
+    when their fault clears, so the dump dominates one window no
+    matter how small its share of overall traffic: robust where the
+    overall p95 dilutes a short outage below the percentile cut."""
+    series = log.windowed_percentile(RECOVERY_WINDOW_S, 95.0)
+    if series.size == 0:
+        return math.nan
+    return float(np.nanmax(series[:, 1]))
+
+
+def _recovery_s(res, cosim, clean_p95: float,
+                duration_s: float) -> float:
+    """Seconds from the last crash/partition window clearing until the
+    windowed p95 re-enters ``RECOVERY_CEIL`` x the clean p95."""
+    ends = [t for t, what, kind, _ in cosim.fault_log
+            if what == "end" and kind in DOWN_KINDS]
+    if not ends:
+        return 0.0
+    te = max(ends)
+    series = res.log.windowed_percentile(RECOVERY_WINDOW_S, 95.0)
+    after = series[series[:, 0] >= te]
+    good = after[~np.isnan(after[:, 1])]
+    good = good[good[:, 1] <= RECOVERY_CEIL * clean_p95]
+    if good.size == 0:
+        return float(duration_s - te)
+    return float(good[0, 0] - te)
+
+
+def run(duration_s: float = 60.0, seed: int = 0,
+        engine: str = "batched") -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    clean = run_scenario(SCENARIOS["baseline"](), policy="static",
+                         seed=seed, duration_s=duration_s, engine=engine)
+    arrivals = clean.n_requests
+    for name in ("outage", "domain_outage"):
+        sc, box = _capture(SCENARIOS[name]())
+        res = run_scenario(sc, policy="static", seed=seed,
+                           duration_s=duration_s, engine=engine)
+        cosim = box["cosim"]
+        p = cosim.proc
+        pending = p.retries_scheduled - p.retries_dispatched
+        availability = res.n_requests / arrivals
+        amp = (arrivals + p.retries_dispatched) / arrivals
+        rec = _recovery_s(res, cosim, clean.p95, duration_s)
+        spans = _down_windows(cosim)
+        row = dict(availability=availability,
+                   p95_fault_ms=res.p95, p95_clean_ms=clean.p95,
+                   p95_under_failure_ms=_p95_in_windows(res.log, spans),
+                   recovery_s=rec, retry_amplification=amp,
+                   fault_attempts=float(p.fault_attempts),
+                   drops=float(p.fault_drops),
+                   failovers=float(p.failovers),
+                   retries_pending=float(pending),
+                   standby_promotions=float(cosim.standby_promotions))
+        out[name] = row
+        emit(f"faults_{name}", res.p95 * 1000,
+             ";".join(f"{k}={v:.4g}" for k, v in row.items()))
+        # accounting identity (the CI hard gate re-checks this)
+        assert res.n_requests + pending == arrivals
+        assert p.fault_attempts == p.retries_scheduled + p.failovers
+
+    # failover gate on the outage scenario, measured where it hurts:
+    # p95 over requests arriving inside a down window.  Whole-run p95
+    # dilutes a few-second outage below the percentile cut.
+    sc_nf, box_nf = _capture(_with_retry("outage", NO_FAILOVER))
+    nofail = run_scenario(sc_nf, policy="static", seed=seed,
+                          duration_s=duration_s, engine=engine)
+    sc_f, box_f = _capture(_with_retry("outage", None))
+    fail = run_scenario(sc_f, policy="static", seed=seed,
+                        duration_s=duration_s, engine=engine)
+    p95_nf = _peak_windowed_p95(nofail.log)
+    p95_f = _peak_windowed_p95(fail.log)
+    p95_c = _peak_windowed_p95(clean.log)
+    degradation = p95_nf - p95_c
+    recovered = p95_nf - p95_f
+    frac = recovered / degradation if degradation > 0 else math.nan
+    gate_ok = (not math.isfinite(frac)) or frac >= GATE_FRACTION
+    out["failover_gate"] = dict(
+        peak_p95_clean_ms=p95_c, peak_p95_nofailover_ms=p95_nf,
+        peak_p95_failover_ms=p95_f, recovered_frac=frac,
+        gate=1.0 if gate_ok else 0.0)
+    emit("faults_failover_gate", frac * 1e6,
+         f"recovered_frac={frac:.3f};peak_p95_clean={p95_c:.2f};"
+         f"peak_p95_nofailover={p95_nf:.2f};"
+         f"peak_p95_failover={p95_f:.2f};"
+         f"gate={'pass' if gate_ok else 'FAIL'}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "heap"))
+    args = ap.parse_args()
+    dur = args.duration if args.duration is not None else (
+        40.0 if args.smoke else 60.0)
+    run(duration_s=dur, seed=args.seed, engine=args.engine)
+
+
+if __name__ == "__main__":
+    main()

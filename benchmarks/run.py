@@ -62,6 +62,10 @@ def main() -> None:
               file=sys.stderr)
         from benchmarks import perf_decode_cache
         perf_decode_cache.run_paged(out="BENCH_serving.json")
+        print("# --- fault-domain chaos smoke (availability, recovery, "
+              "failover gate) ---", file=sys.stderr)
+        from benchmarks import perf_faults
+        perf_faults.run(duration_s=40.0)
         _maybe_write_json(args.json)
         _maybe_write_prom(args.prom)
         return
@@ -114,6 +118,11 @@ def main() -> None:
     from benchmarks import perf_scenarios
     perf_scenarios.run(duration_s=120.0 if args.full else 60.0,
                        check_determinism=args.full)
+
+    print("# --- fault-domain chaos: availability, recovery, failover "
+          "gate ---", file=sys.stderr)
+    from benchmarks import perf_faults
+    perf_faults.run(duration_s=60.0 if args.full else 40.0)
 
     print("# --- tiered serving subsystem ---", file=sys.stderr)
     from benchmarks import perf_serving_scheduler

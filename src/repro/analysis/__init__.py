@@ -8,7 +8,8 @@ repo root; suppress a sanctioned violation inline with
 from repro.analysis.core import (AnalysisResult, AstCache, FileContext,
                                  Finding, Project, Rule, default_rules,
                                  run_analysis)
-from repro.analysis.determinism import GlobalRngRule, WallClockRule
+from repro.analysis.determinism import (FreshRngInFaultPathRule,
+                                        GlobalRngRule, WallClockRule)
 from repro.analysis.events_rules import EventEffectsRule
 from repro.analysis.imports import JaxFreeImportRule, LazyFacadeRule
 from repro.analysis.telemetry_rules import (NonPerturbationRule,
@@ -17,7 +18,7 @@ from repro.analysis.telemetry_rules import (NonPerturbationRule,
 __all__ = [
     "AnalysisResult", "AstCache", "FileContext", "Finding", "Project",
     "Rule", "default_rules", "run_analysis",
-    "JaxFreeImportRule", "LazyFacadeRule", "GlobalRngRule",
+    "FreshRngInFaultPathRule", "JaxFreeImportRule", "LazyFacadeRule", "GlobalRngRule",
     "WallClockRule", "NonPerturbationRule", "TelemetryBindOnceRule",
     "EventEffectsRule",
 ]

@@ -311,14 +311,16 @@ class AnalysisResult:
 
 def default_rules() -> List[Rule]:
     # local import: the rule modules import this one
-    from repro.analysis.determinism import GlobalRngRule, WallClockRule
+    from repro.analysis.determinism import (FreshRngInFaultPathRule,
+                                            GlobalRngRule, WallClockRule)
     from repro.analysis.events_rules import EventEffectsRule
     from repro.analysis.imports import JaxFreeImportRule, LazyFacadeRule
     from repro.analysis.telemetry_rules import (NonPerturbationRule,
                                                 TelemetryBindOnceRule)
     return [JaxFreeImportRule(), LazyFacadeRule(), GlobalRngRule(),
-            WallClockRule(), NonPerturbationRule(),
-            TelemetryBindOnceRule(), EventEffectsRule()]
+            WallClockRule(), FreshRngInFaultPathRule(),
+            NonPerturbationRule(), TelemetryBindOnceRule(),
+            EventEffectsRule()]
 
 
 def run_analysis(root: str, rules: Optional[Sequence[Rule]] = None,

@@ -12,11 +12,18 @@ gap gates, routing fingerprints — depends on two conventions:
   (DET002: ``time.time``/``perf_counter``/``monotonic`` and argless
   ``datetime.now`` are forbidden there; code that legitimately measures
   real elapsed time calls ``repro.telemetry.tracer.wall_clock`` — the
-  single audited read).
+  single audited read);
+- chaos and retry/failover code draws ONLY from the shared per-run
+  generator the co-sim passes in (DET003: constructing a fresh
+  Generator — even the DET001-sanctioned ``default_rng(seed)`` — inside
+  ``repro.sim.faults`` or a retry/backoff/failover/fault helper would
+  fork the draw stream and break heap-vs-batched retry-schedule
+  parity).
 """
 from __future__ import annotations
 
 import ast
+import re
 from typing import Dict, List, Sequence, Set
 
 from repro.analysis.core import (FileContext, Finding, Rule, dotted_name)
@@ -205,4 +212,83 @@ class WallClockRule(Rule):
                         path=ctx.rel_path, line=node.lineno, rule=self.id,
                         message=f"wall-clock read {name} in a "
                                 f"sim/control path"))
+        return findings
+
+
+class FreshRngInFaultPathRule(Rule):
+    """DET003: fault/retry code never constructs its own Generator.
+
+    Retry schedules, failover decisions and fault timelines must be
+    bit-identical between the heap and the batched request planes —
+    which holds only when every draw comes from the ONE shared per-run
+    generator, consumed in event order.  ``default_rng(seed)`` is fine
+    elsewhere (DET001 sanctions it as the explicit-stream entry point),
+    but inside the chaos module or a retry/backoff/failover helper it
+    forks a private stream whose draws don't interleave with the run's,
+    silently desynchronizing the two engines.
+    """
+
+    id = "DET003"
+    name = "no-fresh-rng-in-fault-path"
+    description = ("chaos plans and retry/backoff/failover helpers may "
+                   "draw randomness only from the shared per-run "
+                   "Generator passed in; constructing a fresh Generator "
+                   "(np.random.default_rng & co.) there is forbidden")
+    #: whole modules where any Generator construction is forbidden
+    module_scope: Sequence[str] = ("repro.sim.faults",)
+    #: modules where only fault-path functions are checked (they host
+    #: sanctioned constructors elsewhere, e.g. bootstrap CIs)
+    function_scope: Sequence[str] = ("repro.sim.request_plane",
+                                     "repro.routing.simulator")
+    _FAULT_FUNC = re.compile(r"retry|backoff|failover|fault",
+                             re.IGNORECASE)
+
+    def _constructor_calls(self, ctx: FileContext,
+                           root: ast.AST) -> List[Finding]:
+        np_names = module_aliases(ctx.tree, "numpy") | {"numpy"}
+        npr_names = module_aliases(ctx.tree, "numpy.random")
+        for local, orig in from_imports(ctx.tree, "numpy").items():
+            if orig == "random":
+                npr_names.add(local)
+        bare = {local for local, orig
+                in from_imports(ctx.tree, "numpy.random").items()
+                if orig in RNG_CONSTRUCTORS}
+        findings: List[Finding] = []
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            hit = (
+                # np.random.default_rng(...) / numpy.random.Generator(...)
+                (len(parts) >= 3 and parts[0] in np_names
+                 and parts[1] == "random"
+                 and parts[2] in RNG_CONSTRUCTORS)
+                # nprandom.default_rng(...)
+                or (len(parts) >= 2 and parts[0] in npr_names
+                    and parts[1] in RNG_CONSTRUCTORS)
+                # default_rng(...) via `from numpy.random import ...`
+                or (len(parts) == 1 and parts[0] in bare))
+            if hit:
+                findings.append(Finding(
+                    path=ctx.rel_path, line=node.lineno, rule=self.id,
+                    message=f"fresh Generator ({name}) constructed in a "
+                            f"fault/retry path; draw from the shared "
+                            f"per-run Generator instead"))
+        return findings
+
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        if ctx.module is None:
+            return []
+        if _in_scope(ctx.module, self.module_scope, ()):
+            return self._constructor_calls(ctx, ctx.tree)
+        if not _in_scope(ctx.module, self.function_scope, ()):
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and self._FAULT_FUNC.search(node.name)):
+                findings.extend(self._constructor_calls(ctx, node))
         return findings

@@ -44,6 +44,7 @@ from repro.serving.workload import poisson_request_arrays
 from repro.sim.events import Event, EventKind, Simulation
 from repro.sim.request_plane import (RULE_CODE, RULES, TIER_CLOUD,
                                      TIER_DEVICE, TIER_EDGE, ColumnarLog,
+                                     RetryPolicy, backoff_delay,
                                      batched_rtt_draws, bucket_admissions,
                                      occupancy_replay)
 from repro.telemetry import Telemetry, maybe as _maybe_tel
@@ -286,6 +287,10 @@ class RequestProcessor:
             self._m_rule = [m.counter(f"requests.rule.{r}")
                             for r in RULES]
             self._m_hist = m.histogram("request.latency_ms")
+            self._m_fault_attempts = m.counter("requests.fault_attempts")
+            self._m_fault_dropped = m.counter("requests.fault_dropped")
+            self._m_retries = m.counter("requests.retries")
+            self._m_failovers = m.counter("requests.failovers")
         self._cols = ColumnarLog()
         self._tier_code = {"device": TIER_DEVICE, "edge": TIER_EDGE,
                            "cloud": TIER_CLOUD}
@@ -298,6 +303,26 @@ class RequestProcessor:
         self._flush_started = False
         self._occ_edge = self.lat.occupancy_dependent("edge")
         self._pending: Dict[int, np.ndarray] = {}
+        # fault-plane state (repro.sim.faults): all empty / None unless
+        # a chaos plan is installed, so fault-free runs never branch
+        # into the scalar core — the non-perturbation contract
+        self.retry_policy: Optional[RetryPolicy] = None
+        self._down: set = set()          # edges currently crashed/partitioned
+        self._drop_p: Dict[int, float] = {}    # edge -> drop probability
+        self._spike_ms: Dict[int, float] = {}  # edge -> added latency (ms)
+        self._fault_active = False
+        self._tick_armed = False         # one ARRIVAL_TICK outstanding, max
+        self._sim: Optional[Simulation] = None
+        # availability accounting (see benchmarks/perf_faults.py): every
+        # failed attempt either schedules a retry or fails over, and
+        # every arrival is logged exactly once unless its retry is still
+        # pending at the horizon — log rows + (scheduled - dispatched)
+        # retries == total arrivals, the CI hard gate
+        self.fault_attempts = 0
+        self.fault_drops = 0
+        self.retries_scheduled = 0
+        self.retries_dispatched = 0
+        self.failovers = 0
         self.edges: Dict[int, EdgeState] = {}
         self.set_topology(topo)
 
@@ -318,11 +343,16 @@ class RequestProcessor:
         self._pending = {}
 
     def bind(self, sim: Simulation) -> None:
+        self._sim = sim
         if self.engine == "heap":
             sim.on(EventKind.REQUEST_ARRIVAL, self.on_arrival)
             sim.on(EventKind.REQUEST_COMPLETION, self.on_completion)
         else:
             sim.set_flush(self.flush_window)
+        # retry/tick events exist only in fault-mode runs; registering
+        # the handlers is free otherwise
+        sim.on(EventKind.REQUEST_RETRY, self.on_retry)
+        sim.on(EventKind.ARRIVAL_TICK, self.on_tick)
 
     def fail_edge(self, edge_id: int) -> None:
         """Edge host died: zero capacity so R3 overflows to the cloud."""
@@ -331,12 +361,92 @@ class RequestProcessor:
             st.capacity_rps = 0.0
             st.tokens = 0.0
 
+    # -- fault plane (repro.sim.faults) -------------------------------------
+
+    def enable_faults(self, policy: RetryPolicy) -> None:
+        """Arm the retry/failover core.  In fault mode *every* request
+        of the heap engine — and every batched window with a fault
+        active — goes through :meth:`_serve_attempt`, the shared scalar
+        core, so the two engines are bit-identical by construction;
+        batched windows with no fault active keep the vectorized path
+        (which the scalar core reproduces exactly when nothing is
+        down)."""
+        self.retry_policy = policy
+
+    def fault_down(self, edge_id: int) -> None:
+        """Edge crashed / partitioned away: attempts targeting it fail
+        into retry/failover until :meth:`fault_up`.  Bucket and
+        in-flight state survive (transient outage, not `fail_edge`)."""
+        self._down.add(int(edge_id))
+        self._recompute_fault_active()
+
+    def fault_up(self, edge_id: int) -> None:
+        self._down.discard(int(edge_id))
+        self._recompute_fault_active()
+
+    def set_drop(self, edge_id: int, p: float) -> None:
+        """Drop-burst window: edge-served requests dropped w.p. ``p``
+        (one uniform draw per attempt); ``p <= 0`` clears."""
+        if p > 0.0:
+            self._drop_p[int(edge_id)] = float(p)
+        else:
+            self._drop_p.pop(int(edge_id), None)
+        self._recompute_fault_active()
+
+    def set_spike(self, edge_id: int, ms: float) -> None:
+        """Latency-spike window: +``ms`` on every request touching the
+        edge (served there or transiting it); ``ms <= 0`` clears."""
+        if ms > 0.0:
+            self._spike_ms[int(edge_id)] = float(ms)
+        else:
+            self._spike_ms.pop(int(edge_id), None)
+        self._recompute_fault_active()
+
+    def _recompute_fault_active(self) -> None:
+        self._fault_active = bool(self._down or self._drop_p
+                                  or self._spike_ms)
+        # crash/partition/drop faults can FAIL attempts, whose backoff
+        # retries must land in the future — the batched plane paces
+        # arrivals one-per-tick while such a fault is live (spike-only
+        # windows never fail anything, so they keep whole-window
+        # scalar replay)
+        if self._down or self._drop_p:
+            self._arm_tick()
+
+    def _arm_tick(self) -> None:
+        """Schedule the batched plane's next fault-window pacing beat
+        at the next pending arrival's exact timestamp (see
+        ``EventKind.ARRIVAL_TICK``).  At most one tick is outstanding;
+        a stale one (fault cleared before it fires) degenerates to a
+        window split, which the vectorized path is invariant to."""
+        if (self.engine == "heap" or self._tick_armed
+                or self.retry_policy is None or self._sim is None):
+            return
+        if self._arr_pos < self._arr_t.size:
+            self._sim.schedule(float(self._arr_t[self._arr_pos]),
+                               EventKind.ARRIVAL_TICK)
+            self._tick_armed = True
+
+    def on_tick(self, sim: Simulation, ev: Event) -> None:
+        """The pre-dispatch inclusive flush already served the arrival
+        this tick paced; all that is left is to keep the beat going
+        while a fail-capable fault remains live."""
+        self._tick_armed = False
+        if self._down or self._drop_p:
+            self._arm_tick()
+
     # -- heap ("parity") engine ---------------------------------------------
 
     def on_completion(self, sim: Simulation, ev: Event) -> None:
         ev.payload.in_service -= 1
 
     def on_arrival(self, sim: Simulation, ev: Event) -> None:
+        if self.retry_policy is not None:
+            # fault mode: every request goes through the shared scalar
+            # core (bit-identical to the fault-free path below when no
+            # fault touches its route)
+            self._serve_attempt(sim, ev.t, int(ev.node), 0, ev.t)
+            return
         t, i = ev.t, ev.node
         busy = self.busy_fn(i, t)
         dec = route_request(i, busy, self.topo.assign, self.edges, now=t)
@@ -364,6 +474,163 @@ class RequestProcessor:
         self._cols.append(t, i, tier_code, rule_code, net + service)
         if self._tel is not None:
             self._record_scalar(tier_code, rule_code, net + service)
+
+    # -- fault-mode scalar core (shared by both engines) ---------------------
+    #
+    # Parity by construction: the heap engine's every request, the
+    # batched engine's fault-active windows, and both engines' retry
+    # dispatches all run _serve_attempt — the same float arithmetic and
+    # the same generator-draw order.  Batched windows with no fault
+    # active keep the vectorized path, which _serve_attempt reproduces
+    # exactly in the fault-free case (it is the on_arrival body plus
+    # fault branches that never trigger).
+
+    def on_retry(self, sim: Simulation, ev: Event) -> None:
+        """A timed-out/dropped request re-attempts after backoff.
+        Control-plane event in *both* engines, so retries split batched
+        windows and interleave with arrivals in global time order."""
+        attempt, t0 = ev.payload
+        self.retries_dispatched += 1
+        self._serve_attempt(sim, ev.t, int(ev.node), int(attempt),
+                            float(t0))
+
+    def _serve_attempt(self, sim: Simulation, t: float, i: int,
+                       attempt: int, t0: float) -> None:
+        """One routing/serve attempt of request ``(t0, i)`` at time
+        ``t`` (``attempt`` is 0 for the arrival itself).  Re-admission
+        goes through the same leaky bucket as a fresh arrival; a failed
+        attempt (crashed/partitioned edge, drop burst) schedules a
+        backoff retry or — attempts/timeout exhausted — fails over
+        straight to the cloud replica (rule R4-failover)."""
+        busy = self.busy_fn(i, t)
+        dec = route_request(i, busy, self.topo.assign, self.edges, now=t)
+        je = dec.edge
+        if je is not None and self._fault_active:
+            if je in self._down:
+                # crashed or partitioned away: the attempt fails whether
+                # the edge was serving (R1) or transiting (R3 overflow)
+                self._fail_attempt(sim, t, i, attempt, t0)
+                return
+            if dec.tier == "edge" and je in self._drop_p:
+                if self.rng.random() < self._drop_p[je]:
+                    self.fault_drops += 1
+                    if self._tel is not None:
+                        self._bump(self._m_fault_dropped)
+                    self._fail_attempt(sim, t, i, attempt, t0)
+                    return
+        occ = self._edge_occupancy(dec, t)
+        service = (self.service_fn(i, dec, occ) if self.service_fn
+                   else self.lat.infer_ms(dec.tier, occupancy=occ))
+        if dec.tier == "edge":
+            st = self.edges[je]
+            st.admit(t)
+            self._push_completion(sim, st, je, t, service)
+            net = float(self.lat.rtt("edge", self.rng))
+        elif dec.tier == "cloud":
+            net = float(self.lat.rtt("cloud", self.rng))
+            if dec.hops == 2:        # forwarded via the edge (R3 overflow)
+                net += float(self.lat.rtt("edge", self.rng))
+        else:
+            net = float(self.lat.rtt("device", self.rng))
+        if self.extra_ms_fn is not None:
+            net += float(self.extra_ms_fn(dec, t, i))
+        if self._spike_ms and je is not None:
+            net += self._spike_ms.get(je, 0.0)
+        tier_code = self._tier_code[dec.tier]
+        rule_code = RULE_CODE[dec.rule]
+        # retried requests log at final service time with the backoff
+        # wait folded in — the columnar log stays time-sorted
+        lat_ms = (t - t0) * 1000.0 + (net + service)
+        self._cols.append(t, i, tier_code, rule_code, lat_ms)
+        if self._tel is not None:
+            self._record_scalar(tier_code, rule_code, lat_ms)
+
+    @staticmethod
+    def _bump(counter) -> None:
+        """Increment a telemetry counter.  Callers guard on ``_tel`` —
+        keeping the mutation here (like ``_record_scalar``) pins the
+        guarded blocks to pure-telemetry effects (contract TEL001)."""
+        counter.value += 1.0
+
+    def _fail_attempt(self, sim: Simulation, t: float, i: int,
+                      attempt: int, t0: float) -> None:
+        pol = self.retry_policy
+        self.fault_attempts += 1
+        if self._tel is not None:
+            self._bump(self._m_fault_attempts)
+        if attempt + 1 < pol.max_attempts:
+            # one uniform draw per scheduled retry — the only randomness
+            # the retry path consumes (contract DET003)
+            u = self.rng.random()
+            t_r = t + backoff_delay(pol, attempt, u)
+            if t_r - t0 <= pol.timeout_s:
+                self.retries_scheduled += 1
+                if self._tel is not None:
+                    self._bump(self._m_retries)
+                sim.schedule(t_r, EventKind.REQUEST_RETRY, node=i,
+                             payload=(attempt + 1, t0))
+                return
+        # tier failover: the cloud replica is always reachable, so no
+        # request is ever lost — it just pays the failover hop
+        self.failovers += 1
+        if self._tel is not None:
+            self._bump(self._m_failovers)
+        dec = RouteDecision("cloud", None, hops=1, rule="R4-failover")
+        service = (self.service_fn(i, dec, 0) if self.service_fn
+                   else self.lat.infer_ms("cloud", occupancy=0))
+        net = float(self.lat.rtt("cloud", self.rng))
+        if self.extra_ms_fn is not None:
+            net += float(self.extra_ms_fn(dec, t, i))
+        lat_ms = (t - t0) * 1000.0 + (net + service)
+        self._cols.append(t, i, TIER_CLOUD, RULE_CODE["R4-failover"],
+                          lat_ms)
+        if self._tel is not None:
+            self._record_scalar(TIER_CLOUD, RULE_CODE["R4-failover"],
+                                lat_ms)
+
+    def _edge_occupancy(self, dec: RouteDecision, t: float) -> int:
+        """Occupancy the chosen edge replica has in flight at ``t`` —
+        the heap engine reads its event-maintained ``in_service``, the
+        batched fallback drains the same per-edge completion array the
+        vectorized ``occupancy_replay`` carries (identical counts: both
+        exclude completions at exactly ``t``, which a heap run would
+        have processed before the same-instant arrival)."""
+        if dec.tier != "edge":
+            return 0
+        if self.engine == "heap":
+            return self.edges[dec.edge].in_service
+        if not self._occ_edge:
+            return 0                 # constant model ignores occupancy
+        pend = self._pending.get(dec.edge)
+        if pend is None or not pend.size:
+            return 0
+        cut = int(np.searchsorted(pend, t, side="right"))
+        if cut:
+            pend = pend[cut:]
+            self._pending[dec.edge] = pend
+            self.edges[dec.edge].in_service = int(pend.size)
+        return int(pend.size)
+
+    def _push_completion(self, sim: Simulation, st: EdgeState, je: int,
+                         t: float, service: float) -> None:
+        """Record the served request's completion: a heap event (the
+        fault-free heap path's exact schedule) or a sorted insert into
+        the batched engine's carried pending array."""
+        if self.engine == "heap":
+            sim.schedule(t + service / 1000.0,
+                         EventKind.REQUEST_COMPLETION, node=je,
+                         payload=st)
+            return
+        if not self._occ_edge:
+            return
+        c = t + service / 1000.0
+        pend = self._pending.get(je)
+        if pend is None or not pend.size:
+            pend = np.array([c], dtype=np.float64)
+        else:
+            pend = np.insert(pend, int(np.searchsorted(pend, c)), c)
+        self._pending[je] = pend
+        st.in_service = int(pend.size)
 
     # -- batched engine ------------------------------------------------------
 
@@ -405,6 +672,18 @@ class RequestProcessor:
         return float(self.stretch_fn(tier, np.asarray([node]))[0])
 
     def _process_window(self, t: np.ndarray, dev: np.ndarray) -> None:
+        if self._fault_active and self.retry_policy is not None:
+            # a fault is live somewhere on the continuum: replay the
+            # window through the shared scalar core so drops, retries
+            # and failovers land bit-identically to the heap engine.
+            # Fault-free windows (the common case) stay vectorized.
+            if self._tel is not None:
+                self._bump(self._m_windows)
+            sim = self._sim
+            for k in range(t.size):
+                tk = float(t[k])
+                self._serve_attempt(sim, tk, int(dev[k]), 0, tk)
+            return
         n = t.size
         assign = self.topo.assign
         busy = (np.asarray(self.busy_mask_fn(dev, t), dtype=bool)

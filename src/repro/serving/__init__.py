@@ -19,6 +19,8 @@ _LAZY = {
     "PagePool": "repro.serving.page_pool",
     "PagesExhausted": "repro.serving.page_pool",
     "DEFAULT_TIERS": "repro.serving.replica",
+    "FAILOVER_ORDER": "repro.serving.replica",
+    "HEALTH_STATES": "repro.serving.replica",
     "ReplicaPool": "repro.serving.replica",
     "TierSpec": "repro.serving.replica",
     "lm_tiers": "repro.serving.replica",

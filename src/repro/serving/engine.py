@@ -191,6 +191,16 @@ class ServeEngine:
         if self._tel is not None:
             self._tel.metrics.counter("serve.evictions").inc()
 
+    def drain(self) -> List[int]:
+        """Crash recovery: evict every live slot at once (their cache
+        contents are considered lost).  Returns the drained slot ids so
+        the scheduler can requeue the corresponding requests."""
+        drained = [s for s in range(self.batch_size)
+                   if s not in self._free_set]
+        for slot in drained:
+            self.evict(slot)
+        return drained
+
     @property
     def active_slots(self) -> int:
         return self.batch_size - len(self.free_slots)
@@ -449,14 +459,22 @@ class PagedServeEngine:
             else int(reserve_tokens)
         reserved = min(S + max(reserve, 1), self.max_len)
         table = self.pool.allocate(slot, reserved)
-        row = np.full((self.pages_per_seq,), self.scratch_page, np.int32)
-        row[:len(table)] = table
-        self._block_tables[slot] = row
-        Sb = bucket_len(S)
-        padded = jnp.zeros((1, Sb), jnp.int32).at[:, :S].set(prompt)
-        first, self.cache = self._prefill(
-            self.params, padded, jnp.int32(S), self.cache,
-            jnp.asarray(row[None]))
+        try:
+            row = np.full((self.pages_per_seq,), self.scratch_page,
+                          np.int32)
+            row[:len(table)] = table
+            self._block_tables[slot] = row
+            Sb = bucket_len(S)
+            padded = jnp.zeros((1, Sb), jnp.int32).at[:, :S].set(prompt)
+            first, self.cache = self._prefill(
+                self.params, padded, jnp.int32(S), self.cache,
+                jnp.asarray(row[None]))
+        except BaseException:
+            # allocation succeeded but prefill didn't: hand the pages
+            # back, or every failed admission leaks a block table
+            self.pool.release(slot)
+            self._block_tables[slot] = self.scratch_page
+            raise
         self._pos[slot] = S
         self._next_tok[slot, 0] = int(first[0])
         if slot in self._free_set:
@@ -466,10 +484,14 @@ class PagedServeEngine:
 
     def evict(self, slot: int) -> None:
         """Return the row's pages to the pool.  Double eviction raises —
-        silently re-freeing would hand the same pages to two sequences."""
+        silently re-freeing would hand the same pages to two sequences.
+        A row whose admission failed mid-prefill holds no pages (they
+        were released on the error path); evicting it just frees the
+        row."""
         if slot in self._free_set:
             raise ValueError(f"slot {slot} is already free (double evict)")
-        self.pool.release(slot)
+        if slot in self.pool.sequences:
+            self.pool.release(slot)
         self._block_tables[slot] = self.scratch_page
         self._pos[slot] = 0
         self._next_tok[slot] = 0
@@ -477,6 +499,22 @@ class PagedServeEngine:
         self._free_set.add(slot)
         if self._tel is not None:
             self._tel.metrics.counter("serve.evictions").inc()
+
+    def drain(self) -> List[int]:
+        """Crash recovery: evict every live row, returning all their
+        pages to the pool, and verify the pool comes back whole
+        (invariants hold and every page is free again).  Returns the
+        drained slot ids so the scheduler can requeue the requests."""
+        drained = [s for s in range(self.max_seqs)
+                   if s not in self._free_set]
+        for slot in drained:
+            self.evict(slot)
+        self.pool.check_invariants()
+        if self.pool.free_pages != self.num_pages:
+            raise RuntimeError(
+                f"page leak after drain: {self.pool.free_pages} free of "
+                f"{self.num_pages}")
+        return drained
 
     @property
     def active_slots(self) -> int:

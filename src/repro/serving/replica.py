@@ -31,6 +31,18 @@ from repro.serving.engine import (EngineMeasurement, PagedServeEngine,
 
 TIERS = ("device", "edge", "cloud")
 
+#: replica health states
+HEALTHY, DEGRADED, DOWN = "healthy", "degraded", "down"
+HEALTH_STATES = (HEALTHY, DEGRADED, DOWN)
+
+#: failover order: where a tier's traffic goes when its replica is down
+#: (up the hierarchy — the cloud is the tier of last resort)
+FAILOVER_ORDER: Dict[str, Tuple[str, ...]] = {
+    "device": ("edge", "cloud"),
+    "edge": ("cloud",),
+    "cloud": (),
+}
+
 
 @dataclass(frozen=True)
 class TierSpec:
@@ -128,6 +140,8 @@ class ReplicaPool:
         self.seed = seed
         self._shared_params = shared_params
         self._replicas: Dict[str, Any] = {}
+        self._health: Dict[str, str] = {t: HEALTHY for t in self.specs}
+        self.failovers = 0               # dispatches re-routed off a down tier
 
     @property
     def tiers(self) -> Tuple[str, ...]:
@@ -168,13 +182,56 @@ class ReplicaPool:
             raise TypeError(f"tier {tier!r} serves a per-request model")
         return rep
 
+    # -- health / failover --------------------------------------------------
+
+    def health(self, tier: str) -> str:
+        return self._health[tier]
+
+    def set_health(self, tier: str, state: str) -> None:
+        if tier not in self.specs:
+            raise ValueError(f"unknown tier {tier!r}")
+        if state not in HEALTH_STATES:
+            raise ValueError(f"unknown health state {state!r}; "
+                             f"pick from {HEALTH_STATES}")
+        self._health[tier] = state
+
+    def mark_down(self, tier: str) -> List[int]:
+        """Crash a tier: drain its engine (in-flight sequences lose
+        their cache; paged pools are verified leak-free by
+        ``drain``) and stop routing to it until :meth:`mark_up`.
+        Returns the drained slot ids so callers can requeue."""
+        self.set_health(tier, DOWN)
+        rep = self._replicas.get(tier)
+        if rep is not None and hasattr(rep, "drain"):
+            return rep.drain()
+        return []
+
+    def mark_up(self, tier: str) -> None:
+        self.set_health(tier, HEALTHY)
+
+    def resolve_tier(self, tier: str) -> str:
+        """Failover routing: the requested tier if it can serve (healthy
+        or degraded), else the first not-down tier up its
+        :data:`FAILOVER_ORDER` chain.  Raises when the whole chain is
+        down — there is no silent drop."""
+        if self._health.get(tier, DOWN) != DOWN:
+            return tier
+        for alt in FAILOVER_ORDER.get(tier, ()):
+            if alt in self.specs and self._health[alt] != DOWN:
+                self.failovers += 1
+                return alt
+        raise RuntimeError(
+            f"tier {tier!r} is down and so is its whole failover chain "
+            f"{FAILOVER_ORDER.get(tier, ())}")
+
     # -- dispatch -----------------------------------------------------------
 
     def dispatch(self, tier: str, batch, steps: int = 8):
-        """Serve one batch on ``tier``: token generation for LM tiers
-        ((B,S) int prompts -> (B,steps) tokens), a single forward for rnn
-        tiers ((B,T,1) windows -> (B,1) predictions)."""
-        rep = self.replica(tier)
+        """Serve one batch on ``tier`` (or its failover target when the
+        tier is down — see :meth:`resolve_tier`): token generation for
+        LM tiers ((B,S) int prompts -> (B,steps) tokens), a single
+        forward for rnn tiers ((B,T,1) windows -> (B,1) predictions)."""
+        rep = self.replica(self.resolve_tier(tier))
         if isinstance(rep, _RnnReplica):
             return rep.serve(batch)
         return rep.generate(jnp.asarray(batch, jnp.int32), steps=steps)

@@ -83,9 +83,33 @@ class ContinuousBatchingScheduler:
         self._slots_ever_used: set = set()
         self.slot_reuses = 0
         self.peak_occupancy = 0
+        self.requeues = 0                # requests re-admitted after a crash
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def requeue_active(self, now: float) -> int:
+        """Crash recovery: the engine's cache is gone, so every in-flight
+        request restarts from its prompt.  Drains the engine (releasing
+        slots and, for the paged engine, verifying the page pool comes
+        back whole), resets per-request progress and puts the requests
+        back on the queue in arrival order.  Returns how many were
+        requeued."""
+        drained = self.engine.drain()
+        n = 0
+        for slot in drained:
+            req = self.active.pop(slot, None)
+            if req is None:
+                continue
+            req.tokens.clear()
+            req.slot = None
+            req.t_admitted = None
+            req.t_first_token = None
+            self.queue.append(req)
+            n += 1
+        self.queue.sort(key=lambda r: r.arrival_s)    # stable: FIFO again
+        self.requeues += n
+        return n
 
     # -- one scheduling iteration ------------------------------------------
 

@@ -102,6 +102,9 @@ class CoSimResult:
         default_factory=list)        # (t, device, round idx, epochs dropped)
     move_log: List[Tuple[float, int, int, int]] = field(
         default_factory=list)        # (t, device, old edge, new edge)
+    fault_stats: Dict[str, int] = field(default_factory=dict)
+    #                                  chaos accounting: attempts failed,
+    #                                  retries, failovers, promotions, ...
 
 
 class CoSim:
@@ -158,6 +161,28 @@ class CoSim:
         self._active_rounds = 0
         self._active_aggs: Set[Tuple[int, int]] = set()
         self._sched_count = 0
+        # chaos subsystem (repro.sim.faults): inert until
+        # schedule_faults arms it — no draws, no events, no branches on
+        # the request path, so fingerprints stay bit-identical to a
+        # fault-free build (tests/test_faults.py pins this)
+        self._faults_armed = False
+        self._standby_enabled = True
+        self.quorum = 0.0                # min fraction of devices whose
+        #                                  edge is up for round credit
+        self.max_stale_rounds = 2        # staleness bound: consecutive
+        #                                  below-quorum rounds tolerated
+        self.stale_rounds = 0
+        self.rounds_below_quorum = 0
+        self.stale_bound_exceeded = 0
+        self.last_round_quorum_ok = True
+        self.standby_promotions = 0
+        # fault-window bookkeeping: widx -> (kind, param, resolved edge
+        # ids at start time); standby snapshots per widx for restore
+        self._active_faults: Dict[int, Tuple[str, float, Tuple[int, ...]]]\
+            = {}
+        self._standby: Dict[int, List[Tuple[int, int, np.ndarray]]] = {}
+        self.fault_log: List[Tuple[float, str, str,
+                                   Tuple[int, ...]]] = []
         self.rounds_completed = 0
         self.last_round_end = -math.inf
         self.reconfig_until = -math.inf
@@ -192,6 +217,8 @@ class CoSim:
         s.on(EventKind.STRAGGLER, self._on_straggler)
         s.on(EventKind.DEVICE_MOVE, self._on_device_move)
         s.on(EventKind.TENANT_LOAD, self._on_tenant_load)
+        s.on(EventKind.FAULT_START, self._on_fault_start)
+        s.on(EventKind.FAULT_END, self._on_fault_end)
         if self.tel is not None:
             # observation-only handler: DRIFT_ONSET otherwise has no
             # CoSim handler (the reactive loop registers its own).
@@ -276,6 +303,42 @@ class CoSim:
         if duration_s is not None:
             self.sim.schedule(t + duration_s, EventKind.TENANT_LOAD,
                               node=int(edge_id), payload=(src, 0.0))
+
+    def schedule_faults(self, plan, retry=None, standby: bool = True,
+                        quorum: float = 0.0,
+                        max_stale_rounds: int = 2):
+        """Arm the chaos subsystem: compile ``plan`` (a
+        ``repro.sim.faults.FaultPlan``) into fault windows using the
+        shared per-run generator — the draws happen *here*, after the
+        speed and arrival draws, so both engines see the identical
+        timeline — and schedule a ``FAULT_START``/``FAULT_END`` pair
+        per window.  ``retry`` is the request plane's
+        :class:`~repro.sim.request_plane.RetryPolicy` (default policy
+        when None); ``standby`` enables aggregator warm-standby
+        promotion on crash windows; ``quorum`` > 0 enables
+        partial-aggregation round credit with ``max_stale_rounds`` as
+        the staleness bound.  Returns the compiled windows."""
+        from repro.sim.faults import compile_plan
+        from repro.sim.request_plane import RetryPolicy
+        self.proc.enable_faults(retry if retry is not None
+                                else RetryPolicy())
+        self._faults_armed = True
+        self._standby_enabled = bool(standby)
+        self.quorum = float(quorum)
+        self.max_stale_rounds = int(max_stale_rounds)
+        wins = compile_plan(plan, self.rng,
+                            n_edges=self.proc.topo.n_edges,
+                            duration_s=self.cfg.duration_s)
+        for k, w in enumerate(wins):
+            node = w.edges[0] if w.edges else -1
+            self.sim.schedule(w.t0, EventKind.FAULT_START, node=node,
+                              payload=(k, w))
+            self.sim.schedule(w.t1, EventKind.FAULT_END, node=node,
+                              payload=(k, w))
+        if self.tel is not None:
+            self.tel.metrics.gauge("faults.windows_planned").set(
+                float(len(wins)))
+        return wins
 
     # -- training timeline handlers -----------------------------------------
 
@@ -390,6 +453,33 @@ class CoSim:
         self._epoch_sched.pop((sid, w.index), None)
         self.rounds_completed += 1
         self.last_round_end = sim.now
+        # partial-aggregation quorum: a round whose upload window closed
+        # with too many devices behind a down aggregator aggregates a
+        # partial model — it completes, but earns no accuracy credit
+        # (the reactive loop checks last_round_quorum_ok, set here
+        # because CoSim's handler runs before the loop's) and counts
+        # toward the staleness bound
+        self.last_round_quorum_ok = True
+        if self._faults_armed and self.quorum > 0.0:
+            assign = self.proc.topo.assign
+            down = self.proc._down
+            frac_ok = 1.0
+            if down and assign.size:
+                bad = np.isin(assign, np.array(sorted(down),
+                                               dtype=assign.dtype))
+                frac_ok = 1.0 - float(np.mean(bad))
+            if frac_ok < self.quorum:
+                self.last_round_quorum_ok = False
+                self.rounds_below_quorum += 1
+                self.stale_rounds += 1
+                if self.stale_rounds > self.max_stale_rounds:
+                    self.stale_bound_exceeded += 1
+                if self.tel is not None:
+                    self.tel.metrics.counter("rounds.below_quorum").inc()
+                    self.tel.metrics.gauge("rounds.stale_streak").set(
+                        float(self.stale_rounds))
+            else:
+                self.stale_rounds = 0
         if self.tel is not None:
             self.tel.tracer.close(("round", sid, w.index), ev.t)
             self.tel.metrics.counter("training.rounds_completed").inc()
@@ -416,6 +506,105 @@ class CoSim:
             self.tel.tracer.instant("node_failure", ev.t, cat="fault",
                                     edge=ev.node, resolved_edge=cur)
             self.tel.metrics.counter("events.node_failure").inc()
+
+    # -- chaos / fault-domain handlers --------------------------------------
+
+    def _on_fault_start(self, sim: Simulation, ev: Event) -> None:
+        from repro.sim.faults import DOWN_KINDS, FAULT_CRASH
+        widx, w = ev.payload
+        # resolve injection-time edge ids to the current topology once,
+        # at window open — a mid-window recluster must not retarget it
+        resolved = tuple(cur for cur in
+                         (self.resolve_edge(e) for e in w.edges)
+                         if cur is not None and cur in self.proc.edges)
+        self._active_faults[widx] = (w.kind, w.param, resolved)
+        if w.kind == FAULT_CRASH and self._standby_enabled:
+            for cur in resolved:
+                self._promote_standby(ev.t, widx, cur)
+        self._refresh_fault_state()
+        self.fault_log.append((ev.t, "start", w.kind, resolved))
+        if self.tel is not None:
+            self.tel.tracer.instant("fault_start", ev.t, cat="fault",
+                                    kind=w.kind, edges=list(resolved),
+                                    param=w.param)
+            self.tel.metrics.counter("faults.windows_started").inc()
+            if w.kind in DOWN_KINDS:
+                self.tel.metrics.counter("faults.edges_down").inc(
+                    float(len(resolved)))
+
+    def _on_fault_end(self, sim: Simulation, ev: Event) -> None:
+        widx, w = ev.payload
+        entry = self._active_faults.pop(widx, None)
+        if entry is None:
+            return
+        for failed, backup, moved in self._standby.pop(widx, []):
+            # devices still parked on the standby go home; a recluster
+            # in between rewrote the assignment wholesale, in which
+            # case nothing matches and nothing moves
+            assign = self.proc.topo.assign
+            if failed in self.proc.edges:
+                back = moved[assign[moved] == backup]
+                assign[back] = failed
+        self._refresh_fault_state()
+        self.fault_log.append((ev.t, "end", w.kind, entry[2]))
+        if self.tel is not None:
+            self.tel.tracer.instant("fault_end", ev.t, cat="fault",
+                                    kind=w.kind, edges=list(entry[2]))
+            self.tel.metrics.counter("faults.windows_ended").inc()
+
+    def _refresh_fault_state(self) -> None:
+        """Recompute the request plane's fault view from the currently
+        open windows — overlapping windows compose (union of down
+        edges, max of drop/spike params) and closing one window never
+        clears a fault another still imposes."""
+        from repro.sim.faults import DOWN_KINDS, FAULT_DROP, FAULT_SPIKE
+        proc = self.proc
+        down: Set[int] = set()
+        drop: Dict[int, float] = {}
+        spike: Dict[int, float] = {}
+        for widx in sorted(self._active_faults):
+            kind, param, edges = self._active_faults[widx]
+            for cur in edges:
+                if kind in DOWN_KINDS:
+                    down.add(cur)
+                elif kind == FAULT_DROP:
+                    drop[cur] = max(drop.get(cur, 0.0), param)
+                elif kind == FAULT_SPIKE:
+                    spike[cur] = max(spike.get(cur, 0.0), param)
+        proc._down = down
+        proc._drop_p = drop
+        proc._spike_ms = spike
+        proc._recompute_fault_active()
+
+    def _promote_standby(self, t: float, widx: int, failed: int) -> None:
+        """Aggregator warm-standby promotion: the crashed edge's
+        devices re-associate to a healthy backup edge for the outage —
+        their R1 traffic and round uploads land there — instead of
+        forcing a full budget-metered recluster.  Restored at
+        ``FAULT_END``; a permanent ``NODE_FAILURE`` still takes the
+        recluster path."""
+        from repro.sim.faults import DOWN_KINDS
+        already = self._active_faults  # down set not yet refreshed
+        down_now = {c for e in already.values()
+                    if e[0] in DOWN_KINDS for c in e[2]}
+        backups = [j for j in sorted(self.proc.edges)
+                   if j != failed and j not in down_now]
+        if not backups:
+            return
+        backup = backups[0]
+        assign = self.proc.topo.assign
+        moved = np.flatnonzero(assign == failed)
+        if moved.size == 0:
+            return
+        assign[moved] = backup
+        self._standby.setdefault(widx, []).append(
+            (failed, backup, moved))
+        self.standby_promotions += 1
+        if self.tel is not None:
+            self.tel.tracer.instant("standby_promotion", t, cat="fault",
+                                    failed_edge=failed, backup=backup,
+                                    devices=int(moved.size))
+            self.tel.metrics.counter("faults.standby_promotions").inc()
 
     def _on_capacity_change(self, sim: Simulation, ev: Event) -> None:
         """Apply the new rate to the edge's admission state even without
@@ -607,7 +796,8 @@ class CoSim:
                 * self.cfg.interference.migration_share * max(n_edges, 1))
 
     def apply_deployment(self, deployment, reason: str = "recluster",
-                         forced: bool = False) -> bool:
+                         forced: bool = False,
+                         absorb: bool = False) -> bool:
         """Swap in a re-clustered deployment mid-simulation, paying a
         modeled reconfiguration cost: replicas migrate for
         ``reconfig_s`` seconds during which edges carry migration load
@@ -615,16 +805,23 @@ class CoSim:
 
         When a :class:`ReconfigBudget` is attached, the swap is metered
         first — an unaffordable, non-``forced`` swap is vetoed (returns
-        False, the deployment does NOT go live).
+        False, the deployment does NOT go live).  ``absorb=True`` folds
+        the swap into a migration window that is still open (a failure
+        recluster superseding an in-flight swap): the budget is *not*
+        charged again — the running migration already paid — the
+        migration clock just restarts on the new target.
 
         With telemetry attached, every attempt lands in the decision
         audit log: trigger (the ``reason`` string the reactive loop
         passes), modeled migration cost, whether the budget was
-        charged, and applied / forced (overrun) / vetoed outcome."""
+        charged, and applied / forced (overrun) / absorbed / vetoed
+        outcome."""
         t = self.sim.now
         cost = self.reconfig_cost(deployment)
+        if absorb:
+            cost = 0.0               # in-flight window already paid
         affordable = self.budget is None or self.budget.can_afford(cost)
-        if self.budget is not None and not self.budget.charge(
+        if self.budget is not None and not absorb and not self.budget.charge(
                 t, cost, reason, forced=forced):
             if self.tel is not None:
                 self.tel.audit.record(
@@ -657,8 +854,9 @@ class CoSim:
                 evidence["budget_remaining"] = self.budget.remaining
             self.tel.audit.record(
                 t, "deployment_swap", trigger=reason,
-                outcome=("applied" if affordable else "forced"),
-                cost=cost, charged=self.budget is not None,
+                outcome=("absorbed" if absorb
+                         else "applied" if affordable else "forced"),
+                cost=cost, charged=self.budget is not None and not absorb,
                 forced=forced, evidence=evidence)
             # migration window has a known duration — record it whole
             self.tel.tracer.complete(
@@ -744,10 +942,26 @@ class CoSim:
                else np.zeros((0, 2)))
         actions = (list(self.reactive.actions)
                    if self.reactive is not None else [])
+        fault_stats: Dict[str, int] = {}
+        if self._faults_armed:
+            p = self.proc
+            fault_stats = {
+                "fault_attempts": p.fault_attempts,
+                "fault_drops": p.fault_drops,
+                "retries_scheduled": p.retries_scheduled,
+                "retries_dispatched": p.retries_dispatched,
+                "retries_pending": (p.retries_scheduled
+                                    - p.retries_dispatched),
+                "failovers": p.failovers,
+                "standby_promotions": self.standby_promotions,
+                "rounds_below_quorum": self.rounds_below_quorum,
+                "stale_bound_exceeded": self.stale_bound_exceeded,
+            }
         return CoSimResult(log=self.proc.log(), trace=list(self.sim.trace),
                            rounds_completed=self.rounds_completed,
                            reconfig_times=list(self.reconfig_times),
                            mse_series=mse, actions=actions,
                            budget=self.budget,
                            drop_log=list(self.drop_log),
-                           move_log=list(self.move_log))
+                           move_log=list(self.move_log),
+                           fault_stats=fault_stats)

@@ -70,6 +70,24 @@ class EventKind(IntEnum):
     ROUND_END = 13           # the training round is over
     TELEMETRY = 14           # periodic monitor tick (reactive loop)
     REQUEST_ARRIVAL = 15     # an inference request arrives
+    # Fault-plane kinds sort AFTER same-instant arrivals (values above
+    # REQUEST_ARRIVAL): a fault window opening at t applies to arrivals
+    # strictly after t, and a retry landing exactly on an arrival's
+    # timestamp re-attempts after that arrival was served.  ``run``
+    # flushes the request plane *inclusively* before dispatching these,
+    # so the batched engine observes the identical ordering.
+    FAULT_START = 16         # a chaos-plan fault window opens
+    FAULT_END = 17           # the fault clears (crash recovers, etc.)
+    REQUEST_RETRY = 18       # a failed request re-attempts (backoff)
+    # The batched engine's fault-window pacing beat (request-plane
+    # internal, never appears in a heap run): while a crash/partition/
+    # drop fault is live, each pending arrival gets a tick at its exact
+    # timestamp so the pre-dispatch inclusive flush serves it *at that
+    # instant* — a failed attempt then schedules its backoff retry in
+    # the future, exactly where the heap engine would, instead of the
+    # whole window's failures being discovered (and their retries
+    # scheduled into the past) at the next control event.
+    ARRIVAL_TICK = 19        # batched-plane pacing beat during faults
 
 
 @dataclass(frozen=True)
@@ -143,6 +161,10 @@ EVENT_EFFECTS: Dict[EventKind, EventEffect] = {
     EventKind.ROUND_END: EventEffect.MUTATES_ROUTING,
     EventKind.TELEMETRY: EventEffect.READS_LOG,
     EventKind.REQUEST_ARRIVAL: EventEffect.MUTATES_ROUTING,
+    EventKind.FAULT_START: EventEffect.MUTATES_ROUTING,
+    EventKind.FAULT_END: EventEffect.MUTATES_ROUTING,
+    EventKind.REQUEST_RETRY: EventEffect.MUTATES_ROUTING,
+    EventKind.ARRIVAL_TICK: EventEffect.MUTATES_ROUTING,
 }
 
 
@@ -163,7 +185,8 @@ FlushFn = Callable[[float, float, bool], None]
 #: control-plane trace fingerprints when comparing the heap ("parity")
 #: engine against the batched engine, which never materializes them.
 REQUEST_PLANE_KINDS = frozenset({EventKind.REQUEST_ARRIVAL.name,
-                                 EventKind.REQUEST_COMPLETION.name})
+                                 EventKind.REQUEST_COMPLETION.name,
+                                 EventKind.ARRIVAL_TICK.name})
 
 
 def control_trace(trace: List[Tuple[float, str, int]],
@@ -189,6 +212,8 @@ class Simulation:
     fuse_windows: bool = True        # skip flushes at effect-free events
     flush_gate: Optional[FlushGate] = None
     fused_windows: int = 0           # observability: flushes skipped
+    flushed_closed: bool = False     # arrivals at exactly ``flushed_to``
+    #                                  already consumed (inclusive flush)
 
     def on(self, kind: EventKind, handler: Handler) -> None:
         self.handlers.setdefault(kind, []).append(handler)
@@ -226,10 +251,18 @@ class Simulation:
         processed = 0
         while self.queue and self.queue.peek_t() <= until:
             ev = self.queue.pop()
-            if self.flush_fn is not None and ev.t > self.flushed_to:
+            # kinds above REQUEST_ARRIVAL dispatch after same-instant
+            # arrivals in the heap ordering, so their pre-dispatch flush
+            # must consume arrivals at exactly ev.t too
+            late = int(ev.kind) > int(EventKind.REQUEST_ARRIVAL)
+            if self.flush_fn is not None and (
+                    ev.t > self.flushed_to
+                    or (late and ev.t == self.flushed_to
+                        and not self.flushed_closed)):
                 if self._needs_flush(ev):
-                    self.flush_fn(self.flushed_to, ev.t, False)
+                    self.flush_fn(self.flushed_to, ev.t, late)
                     self.flushed_to = ev.t
+                    self.flushed_closed = late
                 else:
                     self.fused_windows += 1
             self.now = ev.t
@@ -241,4 +274,5 @@ class Simulation:
         if self.flush_fn is not None and until >= self.flushed_to:
             self.flush_fn(self.flushed_to, until, True)
             self.flushed_to = until
+            self.flushed_closed = True
         return processed

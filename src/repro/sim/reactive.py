@@ -236,7 +236,11 @@ class ReactiveLoop:
 
     def on_round_end(self, sim: Simulation, ev: Event) -> None:
         sid, w = ev.payload
-        # credit only rounds that trained on post-drift data
+        # credit only rounds that trained on post-drift data AND (under
+        # an armed chaos plan with a quorum) aggregated enough devices
+        # — a below-quorum partial aggregate earns no recovery
+        if not self.cosim.last_round_quorum_ok:
+            return
         self.acc.on_round_complete(round_start=w.start)
 
     def on_node_failure(self, sim: Simulation, ev: Event) -> None:
@@ -255,11 +259,17 @@ class ReactiveLoop:
 
         budget = self.cosim.budget
         exempt = self.policy.budget_exempt_failures
+        # a failure landing inside an in-flight deployment swap folds
+        # into that swap: the open migration window already paid, so
+        # the budget is not charged again (and the re-solve below runs
+        # against the controller's current — post-swap — inventory, so
+        # it can never recluster the pre-swap topology)
+        in_window = ev.t < self.cosim.reconfig_until
         # bound: the re-solved deployment opens at most the surviving
         # inventory edges
         fail_cost = self.cosim.reconfig_cost(
             n_edges=len(self.controller.inventory.edges) - 1)
-        if (not exempt and budget is not None
+        if (not exempt and not in_window and budget is not None
                 and not budget.can_afford(fail_cost)):
             # the edge is gone either way: record the truth in the
             # inventory, but defer the re-deploy — the stale topology
@@ -306,11 +316,13 @@ class ReactiveLoop:
                              range(len(self.controller.inventory.edges))}
         if self.cosim.apply_deployment(
                 dep, reason=f"failure recluster (edge {failed})",
-                forced=exempt):
+                forced=exempt, absorb=in_window):
             self.last_recluster_t = ev.t         # cooldown covers the
             #                                      open migration window
         self.actions.append((ev.t, f"edge {failed} failed -> reclustered "
-                             f"to {len(dep.topology.open_edges)} edges"))
+                             f"to {len(dep.topology.open_edges)} edges"
+                             + (" (folded into in-flight migration)"
+                                if in_window else "")))
 
     def on_capacity_change(self, sim: Simulation, ev: Event) -> None:
         topo_j = self.cosim.resolve_edge(ev.node)

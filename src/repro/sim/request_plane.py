@@ -47,8 +47,14 @@ from repro.routing.rules import EdgeState
 
 #: rule-code table shared by the heap and batched engines; the columnar
 #: log stores the int8 code, ``RequestLog`` materializes the string.
+#: ``R4-failover`` is the fault-plane tier failover — a request whose
+#: edge attempts were exhausted (down/dropped, retries timed out)
+#: re-routed straight to the cloud replica.  The vectorized window path
+#: never emits it (fault windows replay through the shared scalar
+#: core), so it must stay *last*: ``_record_window``'s last-rule-gets-
+#: the-remainder counting then assigns it an exact zero.
 RULES = ("R1", "R1-flat", "R2-local", "R2-edge", "R2-cloud",
-         "R3-overflow")
+         "R3-overflow", "R4-failover")
 RULE_CODE = {name: np.int8(k) for k, name in enumerate(RULES)}
 
 TIER_DEVICE, TIER_EDGE, TIER_CLOUD = 0, 1, 2
@@ -424,3 +430,46 @@ def batched_rtt_draws(rng: np.random.Generator, lat,
     second = raw[off[two_hop] + 1]
     net[two_hop] += e_lo + second * (e_hi - e_lo)
     return net
+
+
+# -- fault-plane retry policy -------------------------------------------
+
+
+class RetryPolicy:
+    """Per-request timeout + capped exponential backoff with jitter,
+    shared by both engines' fault-mode scalar core.
+
+    A failed attempt ``k`` (0-based) schedules a retry after
+    ``min(backoff_cap_s, base_backoff_s * 2**k) * (1 + jitter * u)``
+    with ``u`` one uniform draw from the shared generator stream — the
+    only randomness retries consume (contract DET003).  A request
+    fails over to the cloud replica (rule ``R4-failover``) once it has
+    spent ``max_attempts`` tries or its next retry would land past
+    ``timeout_s`` after the original arrival.  ``max_attempts <= 1``
+    disables retries entirely (immediate failover); a huge
+    ``max_attempts`` + ``timeout_s`` never fails over (requests back
+    off until the fault clears) — the no-failover baseline of
+    ``benchmarks/perf_faults.py``."""
+
+    __slots__ = ("timeout_s", "base_backoff_s", "backoff_cap_s",
+                 "max_attempts", "jitter")
+
+    def __init__(self, timeout_s: float = 2.0,
+                 base_backoff_s: float = 0.05,
+                 backoff_cap_s: float = 0.8,
+                 max_attempts: int = 4,
+                 jitter: float = 0.5):
+        self.timeout_s = float(timeout_s)
+        self.base_backoff_s = float(base_backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.max_attempts = int(max_attempts)
+        self.jitter = float(jitter)
+
+
+def backoff_delay(policy: RetryPolicy, attempt: int, u: float) -> float:
+    """Backoff before retry ``attempt + 1`` given one uniform draw
+    ``u`` in [0, 1).  Pure float arithmetic — evaluated identically by
+    the heap and batched engines."""
+    base = min(policy.backoff_cap_s,
+               policy.base_backoff_s * float(2 ** attempt))
+    return base * (1.0 + policy.jitter * u)

@@ -38,6 +38,8 @@ from repro.orchestration.controller import Deployment
 from repro.sim.budget import ReconfigBudget
 from repro.sim.cosim import CoSim, CoSimConfig
 from repro.sim.events import control_trace
+from repro.sim.faults import (DomainOutagePlan, DropBurstPlan,
+                              EdgeOutagePlan, FaultPlan, PartitionPlan)
 from repro.sim.reactive import ReactiveLoop, ReactivePolicy
 
 POLICIES = ("static", "reactive", "budgeted")
@@ -318,12 +320,85 @@ def churn_scenario(drift_t: float = 30.0,
                     "jobs (budget stress)", inject)
 
 
+def outage_scenario(mttf_s: float = 18.0, mttr_s: float = 5.0,
+                    edges: Tuple[int, ...] = (0,),
+                    partition_edges: Tuple[int, ...] = (1,),
+                    quorum: float = 0.5,
+                    plan: Optional[FaultPlan] = None,
+                    standby: bool = True) -> Scenario:
+    """Edge/aggregator crash-and-recover chaos: ``edges`` cycle through
+    exponential MTTF/MTTR *crash* outages — absorbed by warm-standby
+    aggregator promotion, which re-homes their devices before any
+    request can fail — while ``partition_edges`` cycle through
+    *partition* outages the standby machinery cannot see (the host is
+    up but unreachable), so their R1/R3 traffic exercises the retry +
+    cloud-failover path.  The round machinery enforces the
+    participation quorum throughout.  Pass ``plan`` to substitute any
+    composed :class:`~repro.sim.faults.FaultPlan`."""
+    def inject(cosim: CoSim) -> None:
+        p = plan
+        if p is None:
+            p = EdgeOutagePlan(mttf_s=mttf_s, mttr_s=mttr_s,
+                               edges=tuple(edges))
+            if partition_edges:
+                # anchored inside round *compute* spans, not horizon
+                # fractions or a renewal draw: a partitioned edge only
+                # strands traffic while its devices are busy training
+                # (idle devices serve R2-local), so the retry/failover
+                # path must be exercised where devices are computing —
+                # and the schedule is a pure function of the horizon,
+                # so this stays deterministic at any grid duration
+                T = cosim.cfg.duration_s
+                spans = [(w.start, min(w.compute_end, T))
+                         for w in continual_training(
+                             T, l=cosim.proc.topo.l)
+                         if w.start < T]
+                anchors = (spans[0],) if len(spans) == 1 else (
+                    spans[0], spans[-1])
+                wins = []
+                for s0, s1 in anchors:
+                    c = s1 - s0
+                    wins.append((s0 + 0.25 * c, s0 + 0.60 * c))
+                p = p + PartitionPlan(windows_s=tuple(wins),
+                                      edges=tuple(partition_edges))
+        cosim.schedule_faults(p, standby=standby, quorum=quorum)
+    return Scenario("outage",
+                    f"edge crash/recover cycles (MTTF {mttf_s:.0f}s, "
+                    f"MTTR {mttr_s:.0f}s) with retry + cloud failover",
+                    inject)
+
+
+def domain_outage_scenario(mttf_s: float = 25.0, mttr_s: float = 6.0,
+                           quorum: float = 0.5) -> Scenario:
+    """Correlated failure domains (paired edges sharing an uplink) go
+    dark together, composed with a request-drop burst stream — the
+    regime that stresses quorum aggregation and standby promotion
+    hardest."""
+    def inject(cosim: CoSim) -> None:
+        m = cosim.proc.topo.n_edges
+        doms = tuple((j, j + 1) for j in range(0, m - 1, 2))
+        if not doms:
+            doms = ((0,),)
+        # burst cadence scaled to the horizon so short grid cells still
+        # see at least a couple of drop windows in expectation
+        T = cosim.cfg.duration_s
+        p = (DomainOutagePlan(domains=doms, mttf_s=mttf_s, mttr_s=mttr_s)
+             + DropBurstPlan(p_drop=0.25, every_s=max(T / 5.0, 1.0),
+                             burst_s=max(T / 10.0, 0.5)))
+        cosim.schedule_faults(p, quorum=quorum)
+    return Scenario("domain_outage",
+                    "correlated LAN-domain outages + request-drop "
+                    "bursts (quorum + standby stress)", inject)
+
+
 SCENARIOS: Dict[str, Callable[[], Scenario]] = {
     "baseline": baseline_scenario,
     "straggler": straggler_scenario,
     "mobility": mobility_scenario,
     "multi_tenant": multi_tenant_scenario,
     "churn": churn_scenario,
+    "outage": outage_scenario,
+    "domain_outage": domain_outage_scenario,
 }
 
 

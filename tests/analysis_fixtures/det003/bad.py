@@ -1,0 +1,22 @@
+"""DET003 bad fixture: fault-path code forking its own RNG streams."""
+import numpy as np
+from numpy.random import default_rng
+
+
+def windows(mttf_s, duration_s, seed=0):
+    rng = np.random.default_rng(seed)        # fresh stream in a plan
+    out, t = [], 0.0
+    while t < duration_s:
+        t += float(rng.exponential(mttf_s))
+        out.append(t)
+    return out
+
+
+def backoff_delay(policy, attempt):
+    jitter = default_rng(attempt).random()   # per-retry private stream
+    return policy.base * (2 ** attempt) * (1.0 + jitter)
+
+
+def pick_failover(edges, seed):
+    g = np.random.Generator(np.random.PCG64(seed))   # explicit fork
+    return edges[int(g.integers(len(edges)))]

@@ -1,0 +1,17 @@
+"""DET003 good fixture: every draw comes from the passed generator."""
+
+
+def windows(rng, mttf_s, duration_s):
+    out, t = [], 0.0
+    while t < duration_s:
+        t += float(rng.exponential(mttf_s))
+        out.append(t)
+    return out
+
+
+def backoff_delay(policy, attempt, u):
+    return policy.base * (2 ** attempt) * (1.0 + policy.jitter * u)
+
+
+def pick_failover(rng, edges):
+    return edges[int(rng.integers(len(edges)))]

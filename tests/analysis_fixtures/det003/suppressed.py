@@ -1,0 +1,7 @@
+"""DET003 suppressed fixture: sanctioned fresh stream."""
+import numpy as np
+
+
+def windows(mttf_s, duration_s, seed=0):
+    rng = np.random.default_rng(seed)  # contract: ok DET003
+    return [float(rng.exponential(mttf_s))]

@@ -8,7 +8,8 @@ import sys
 
 import pytest
 
-from repro.analysis import (AstCache, GlobalRngRule, EventEffectsRule,
+from repro.analysis import (AstCache, FreshRngInFaultPathRule,
+                            GlobalRngRule, EventEffectsRule,
                             JaxFreeImportRule, LazyFacadeRule,
                             NonPerturbationRule, Project,
                             TelemetryBindOnceRule, WallClockRule,
@@ -38,6 +39,7 @@ def file_findings(rule, case, name, module):
 
 FILE_RULE_CASES = [
     (GlobalRngRule, "det001", "repro.sim.fixture", 3),
+    (FreshRngInFaultPathRule, "det003", "repro.sim.faults", 4),
     (WallClockRule, "det002", "repro.sim.fixture", 3),
     (NonPerturbationRule, "tel001", "repro.sim.fixture", 4),
     (TelemetryBindOnceRule, "tel002", "repro.sim.fixture", 2),
@@ -75,6 +77,34 @@ def test_det001_out_of_scope_module_ignored():
     path = os.path.join(FIXTURES, "det001", "bad.py")
     ctx = AstCache().get(path, "bad.py", "not_repro.module")
     assert rule.check_file(ctx) == []
+
+
+def test_det003_function_scope_only_flags_fault_helpers():
+    """In request-plane/simulator modules DET003 checks only
+    retry/backoff/failover/fault functions — percentile_ci's bootstrap
+    default_rng stays sanctioned."""
+    rule = FreshRngInFaultPathRule()
+    path = os.path.join(FIXTURES, "det003", "bad.py")
+    # same file, function-scoped module: backoff_delay and
+    # pick_failover match the fault-path name pattern; the plain
+    # `windows` helper falls out of scope
+    ctx = AstCache().get(path, "bad.py", "repro.routing.simulator")
+    findings = rule.check_file(ctx)
+    module_findings = rule.check_file(
+        AstCache().get(path, "bad.py", "repro.sim.faults"))
+    assert 0 < len(findings) < len(module_findings)
+    windows_lines = {f.line for f in module_findings} - \
+        {f.line for f in findings}
+    assert windows_lines                 # `windows` flagged only module-wide
+    # out-of-scope module: nothing
+    ctx = AstCache().get(path, "bad.py", "repro.benchmark.helper")
+    assert rule.check_file(ctx) == []
+    # live fault/retry code is clean under the rule
+    for rel in ("repro/sim/faults.py", "repro/sim/request_plane.py",
+                "repro/routing/simulator.py"):
+        mod = rel[:-3].replace("/", ".")
+        live = AstCache().get(os.path.join(SRC, rel), rel, mod)
+        assert rule.check_file(live) == [], rel
 
 
 def test_det002_allows_tracer_module():

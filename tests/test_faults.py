@@ -1,0 +1,263 @@
+"""Chaos subsystem: fault plans, retry/failover parity, standby
+promotion, quorum accounting, and the non-perturbation contract.
+
+Two hard guarantees anchor this file:
+
+- **Non-perturbation**: with no chaos plan installed — or a plan that
+  compiles to zero windows — every scenario cell is bit-identical to
+  the pre-fault-subsystem goldens (``tests/data/golden_fingerprints
+  .json``), both engines, all policies.
+- **Engine parity**: with faults enabled, the heap and batched engines
+  produce bit-identical control fingerprints, request logs, and
+  fault/retry/failover accounting.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.sim.scenarios import (SCENARIOS, Scenario, domain_outage_scenario,
+                                 outage_scenario, run_scenario)
+from repro.sim.faults import (FAULT_CRASH, FAULT_PARTITION, FaultPlan,
+                              FaultWindow, DropBurstPlan, EdgeOutagePlan,
+                              PartitionPlan, compile_plan)
+from repro.sim.request_plane import RetryPolicy, backoff_delay
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+GOLDEN_SCENARIOS = ("baseline", "straggler", "mobility", "multi_tenant",
+                    "churn")
+POLICIES = ("static", "reactive", "budgeted")
+
+
+def _capture(scenario: Scenario):
+    """Wrap a scenario so the test can read the CoSim after the run."""
+    box = {}
+
+    def inject(cosim):
+        box["cosim"] = cosim
+        scenario.inject(cosim)
+
+    return Scenario(scenario.name, scenario.description, inject), box
+
+
+# ---------------------------------------------------------------------------
+# non-perturbation
+# ---------------------------------------------------------------------------
+
+def test_goldens_bit_identical_without_faults():
+    """Every pre-existing scenario cell (5 scenarios x 3 policies x 2
+    engines) matches the golden fingerprints recorded before the chaos
+    subsystem landed — faults disabled perturb *nothing*."""
+    golden = json.loads((DATA / "golden_fingerprints.json").read_text())
+    assert len(golden) == 30
+    for key, want in golden.items():
+        name, policy, engine = key.split("|")
+        res = run_scenario(SCENARIOS[name](), policy=policy, seed=0,
+                           duration_s=40.0, engine=engine)
+        assert res.fingerprint() == want["fingerprint"], key
+        assert res.control_fingerprint() == want["control_fingerprint"], key
+        assert res.n_requests == want["n_requests"], key
+
+
+@pytest.mark.parametrize("engine", ["heap", "batched"])
+def test_armed_but_empty_plan_is_identity(engine):
+    """Arming the retry core with a plan that compiles to zero windows
+    must not move a single bit: the heap engine then routes every
+    request through the scalar core, so this pins the claim that
+    ``_serve_attempt`` reproduces the fault-free path exactly."""
+    empty = PartitionPlan(windows_s=())
+
+    def inject(cosim):
+        cosim.schedule_faults(empty, standby=True, quorum=0.5)
+
+    plain = run_scenario(SCENARIOS["baseline"](), policy="reactive",
+                         seed=1, duration_s=25.0, engine=engine)
+    armed = run_scenario(Scenario("armed", "", inject), policy="reactive",
+                         seed=1, duration_s=25.0, engine=engine)
+    assert armed.fingerprint() == plain.fingerprint()
+    assert armed.n_requests == plain.n_requests
+
+
+# ---------------------------------------------------------------------------
+# fault plans compile deterministically
+# ---------------------------------------------------------------------------
+
+def test_compiled_plan_deterministic_and_clipped():
+    plan = (EdgeOutagePlan(mttf_s=5.0, mttr_s=2.0, edges=(0, 1))
+            + DropBurstPlan(p_drop=0.4, every_s=6.0, burst_s=2.0)
+            + PartitionPlan(windows_s=((3.0, 80.0),), edges=(2,)))
+    a = compile_plan(plan, np.random.default_rng(9), n_edges=4,
+                     duration_s=30.0)
+    b = compile_plan(plan, np.random.default_rng(9), n_edges=4,
+                     duration_s=30.0)
+    assert a == b
+    assert all(w.t1 <= 30.0 and w.t0 < w.t1 for w in a)
+    assert any(w.kind == FAULT_PARTITION for w in a)
+    # a different stream moves the renewal windows
+    c = compile_plan(plan, np.random.default_rng(10), n_edges=4,
+                     duration_s=30.0)
+    assert c != a
+
+
+# ---------------------------------------------------------------------------
+# engine parity with faults live
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,policy", [
+    ("outage", "static"), ("outage", "reactive"),
+    ("domain_outage", "reactive")])
+def test_fault_scenarios_engine_parity(name, policy):
+    """Heap and batched engines agree bit-for-bit on the control
+    trace, the request log, and every fault counter — while the chaos
+    actually engages (nonzero attempts, retries and failovers or
+    drops), so the parity is not vacuous."""
+    rows = {}
+    for engine in ("heap", "batched"):
+        sc, box = _capture(SCENARIOS[name]())
+        res = run_scenario(sc, policy=policy, seed=0, duration_s=40.0,
+                           engine=engine)
+        p = box["cosim"].proc
+        rows[engine] = dict(
+            fp=res.control_fingerprint(),
+            t=np.asarray(res.log.t), lat=np.asarray(res.log.latency_ms),
+            tier=np.asarray(res.log.tier), rule=list(res.log.rule),
+            attempts=p.fault_attempts, retries=p.retries_scheduled,
+            dispatched=p.retries_dispatched, failovers=p.failovers,
+            drops=p.fault_drops)
+    h, b = rows["heap"], rows["batched"]
+    assert h["fp"] == b["fp"]
+    assert np.array_equal(h["t"], b["t"])
+    assert np.array_equal(h["lat"], b["lat"])
+    assert np.array_equal(h["tier"], b["tier"])
+    assert h["rule"] == b["rule"]
+    for k in ("attempts", "retries", "dispatched", "failovers", "drops"):
+        assert h[k] == b[k], k
+    assert h["attempts"] > 0
+    assert h["retries"] > 0
+
+
+def test_failover_rule_logged_and_latency_includes_backoff():
+    """Exhausted retries fail over to the cloud under rule
+    ``R4-failover`` and the logged latency folds in the wait since the
+    original arrival."""
+    sc, box = _capture(outage_scenario())
+    res = run_scenario(sc, policy="static", seed=0, duration_s=40.0,
+                       engine="batched")
+    p = box["cosim"].proc
+    rules = np.asarray(res.log.rule)
+    n_failover = int(np.sum(rules == "R4-failover"))
+    assert n_failover == p.failovers > 0
+    # failed-over requests waited through >= 1 backoff, so their
+    # latencies dominate the overall median
+    lat = np.asarray(res.log.latency_ms)
+    assert np.median(lat[rules == "R4-failover"]) > np.median(lat)
+
+
+# ---------------------------------------------------------------------------
+# accounting identities (the CI hard gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["heap", "batched"])
+def test_availability_accounting_identity(engine):
+    """Every arrival is logged exactly once unless its retry is still
+    pending at the horizon, and every failed attempt either scheduled
+    a retry or failed over — no request is silently lost."""
+    base = run_scenario(SCENARIOS["baseline"](), policy="static", seed=0,
+                        duration_s=40.0, engine=engine)
+    sc, box = _capture(outage_scenario())
+    res = run_scenario(sc, policy="static", seed=0, duration_s=40.0,
+                       engine=engine)
+    p = box["cosim"].proc
+    pending = p.retries_scheduled - p.retries_dispatched
+    assert pending >= 0
+    assert res.n_requests + pending == base.n_requests
+    assert p.fault_attempts == p.retries_scheduled + p.failovers
+    assert 0 <= p.fault_drops <= p.fault_attempts
+
+
+def test_backoff_delay_capped_exponential():
+    pol = RetryPolicy(base_backoff_s=0.1, backoff_cap_s=0.35, jitter=0.5)
+    # attempt k doubles the base until the cap; u stretches by jitter
+    assert backoff_delay(pol, 0, 0.0) == pytest.approx(0.1)
+    assert backoff_delay(pol, 1, 0.0) == pytest.approx(0.2)
+    assert backoff_delay(pol, 4, 0.0) == pytest.approx(0.35)
+    assert backoff_delay(pol, 0, 1.0) > backoff_delay(pol, 0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# aggregator warm standby + quorum
+# ---------------------------------------------------------------------------
+
+class _FixedCrash(FaultPlan):
+    """Crash windows at fixed times (test-only): deterministic standby
+    promotion without renewal-draw luck."""
+
+    def __init__(self, windows, edges):
+        self.windows_s = tuple(windows)
+        self.edges = tuple(edges)
+
+    def windows(self, rng, n_edges, duration_s):
+        return [FaultWindow(t0, min(t1, duration_s), FAULT_CRASH,
+                            self.edges)
+                for t0, t1 in self.windows_s]
+
+
+@pytest.mark.parametrize("engine", ["heap", "batched"])
+def test_standby_promotion_and_restore(engine):
+    """A crashed aggregator's devices re-home to the warm standby for
+    the outage — absorbing the fault before any request can fail — and
+    go home when it recovers."""
+    plan = _FixedCrash([(5.0, 15.0)], edges=(0,))
+
+    def inject(cosim):
+        inject.home = cosim.proc.topo.assign.copy()
+        cosim.schedule_faults(plan, standby=True, quorum=0.0)
+
+    sc, box = _capture(Scenario("standby", "", inject))
+    run_scenario(sc, policy="static", seed=0, duration_s=30.0,
+                 engine=engine)
+    c = box["cosim"]
+    assert c.standby_promotions == 1
+    # the crash was fully absorbed: no attempt ever failed
+    assert c.proc.fault_attempts == 0
+    # devices re-homed at FAULT_START went home at FAULT_END
+    assert np.array_equal(c.proc.topo.assign, inject.home)
+    assert [(round(t, 3), what) for t, what, _, _ in c.fault_log] == [
+        (5.0, "start"), (15.0, "end")]
+
+
+def test_standby_disabled_exposes_crash_to_request_plane():
+    plan = _FixedCrash([(5.0, 15.0)], edges=(0,))
+
+    def inject(cosim):
+        cosim.schedule_faults(plan, standby=False)
+
+    sc, box = _capture(Scenario("nostandby", "", inject))
+    run_scenario(sc, policy="static", seed=0, duration_s=30.0,
+                 engine="batched")
+    c = box["cosim"]
+    assert c.standby_promotions == 0
+    assert c.proc.fault_attempts > 0
+
+
+@pytest.mark.parametrize("engine", ["heap", "batched"])
+def test_quorum_and_staleness_bound(engine):
+    """A partition that strands most devices behind unreachable
+    aggregators denies round quorum; consecutive below-quorum rounds
+    past the staleness bound are flagged."""
+    plan = PartitionPlan(windows_s=((0.0, 100.0),))  # all edges, all run
+
+    def inject(cosim):
+        cosim.schedule_faults(plan, standby=False, quorum=0.9,
+                              max_stale_rounds=1)
+
+    sc, box = _capture(Scenario("noquorum", "", inject))
+    run_scenario(sc, policy="static", seed=0, duration_s=100.0,
+                 engine=engine)
+    c = box["cosim"]
+    assert c.rounds_completed >= 2
+    assert c.rounds_below_quorum == c.rounds_completed
+    assert not c.last_round_quorum_ok
+    assert c.stale_bound_exceeded == c.rounds_completed - 1

@@ -373,3 +373,52 @@ def test_reactive_repeated_runs_are_reproducible():
     assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
     assert ctl_a.recluster_count == ctl_b.recluster_count
     assert a.actions == b.actions
+
+
+# ---------------------------------------------------------------------------
+# regression: a failure inside an open migration window folds into it
+# ---------------------------------------------------------------------------
+
+def test_failure_during_migration_window_not_double_charged():
+    """A second failure landing inside the first recluster's open
+    migration window must fold into that swap: the ReconfigBudget is
+    charged once (the window already paid), and the re-solve runs
+    against the post-swap inventory so the edge mapping stays
+    consistent."""
+    from repro.sim.budget import ReconfigBudget
+
+    def run(fail_times):
+        topo, ctl = _scenario(slack=2.5)
+        loop = ReactiveLoop(ctl, policy=ReactivePolicy(
+            p95_threshold_ms=1e9, budget_exempt_failures=False))
+        budget = ReconfigBudget(total=1e9)       # never vetoes
+        cosim = CoSim(topo, CoSimConfig(duration_s=40.0, seed=0),
+                      reactive=loop, budget=budget)
+        for t, j in fail_times:
+            cosim.schedule_failure(t, edge_id=j)
+        res = cosim.run()
+        return topo, ctl, cosim, budget, res
+
+    # reconfig_s defaults to 5.0: the t=17 failure lands inside the
+    # window the t=15 recluster opened ([15, 20))
+    topo, ctl, cosim, budget, res = run([(15.0, 0), (17.0, 1)])
+    _, _, _, budget_one, _ = run([(15.0, 0)])
+
+    assert ctl.recluster_count == 2
+    assert len(ctl.inventory.edges) == 2         # both removals landed
+    folded = [a for _, a in res.actions
+              if "folded into in-flight migration" in a]
+    assert len(folded) == 1
+    # no double charge: the in-window recluster is absorbed at zero cost
+    assert budget.spent == pytest.approx(budget_one.spent)
+    assert budget.vetoes == 0
+    # the absorbed swap restarts the migration clock on the new target
+    # but does not pay for a second window
+    assert res.reconfig_times == [15.0, 17.0]
+    # edge mapping pinned: routing sees the twice-shrunk topology and
+    # every device maps to a live edge of it
+    assert cosim.proc.topo.n_edges == 2
+    assert set(np.unique(cosim.proc.topo.assign)) <= set(
+        cosim.proc.topo.open_edges)
+    # requests keep flowing after both swaps (no orphaned edge ids)
+    assert res.log.t.size > 0 and res.log.t.max() > 17.0

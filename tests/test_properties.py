@@ -147,3 +147,74 @@ def test_histogram_bulk_equals_scalar(vals, chunks):
         np.testing.assert_allclose(bulk.sum, scalar.sum, rtol=1e-12)
         assert bulk.quantile(95) == pytest.approx(scalar.quantile(95))
     assert bulk.snapshot()["buckets"] == scalar.snapshot()["buckets"]
+
+
+# ---------------------------------------------------------------------------
+# fault plane: heap/batched retry-schedule parity under chaos
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000), st.floats(4.0, 30.0), st.floats(1.0, 8.0),
+       st.floats(0.0, 0.5))
+def test_fault_retry_schedule_engine_parity(seed, mttf, mttr, p_drop):
+    """Under any composed fault plan the batched engine's retry
+    schedule — every REQUEST_RETRY / FAULT_* instant in the control
+    trace — and the resulting request log are bit-identical to the
+    heap engine's."""
+    from repro.sim.faults import DropBurstPlan, EdgeOutagePlan
+    from repro.sim.scenarios import outage_scenario, run_scenario
+
+    plan = (EdgeOutagePlan(mttf_s=mttf, mttr_s=mttr, edges=(0, 1))
+            + DropBurstPlan(p_drop=p_drop, every_s=8.0, burst_s=3.0,
+                            edges=(2,)))
+    def run(engine):
+        return run_scenario(outage_scenario(plan=plan), policy="static",
+                            seed=seed, duration_s=12.0, engine=engine)
+
+    a, b = run("batched"), run("heap")
+    assert a.control_fingerprint() == b.control_fingerprint()
+    assert np.array_equal(a.log.t, b.log.t)
+    assert np.array_equal(a.log.tier, b.log.tier)
+    assert np.array_equal(a.log.rule, b.log.rule)
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 200), st.integers(0, 40), st.integers(1, 37))
+def test_retry_at_exact_admission_instant_parity(seed, i0, stride):
+    """Boundary fuzz: open a partition at the EXACT instant of a real
+    arrival and size the (jitter-free) backoff so retries land at the
+    EXACT instant of a later arrival — same-instant
+    retry-vs-admission ordering must resolve identically in both
+    engines (retries are late control events: arrivals at t serve
+    first)."""
+    from hypothesis import assume
+    from repro.sim.scenarios import Scenario, run_scenario
+    from repro.sim.faults import PartitionPlan
+    from repro.sim.request_plane import RetryPolicy
+
+    base = run_scenario(Scenario("probe", "", lambda c: None),
+                        policy="static", seed=seed, duration_s=8.0)
+    ts = np.unique(base.log.t)
+    assume(ts.size > 64)
+    k0 = i0 % (ts.size - 50)
+    t0 = float(ts[k0])
+    t1 = float(ts[k0 + 40])            # window spans ~40 arrival instants
+    gap = float(ts[(i0 + stride) % ts.size] - t0)
+    assume(gap > 1e-6)
+    plan = PartitionPlan(windows_s=((t0, t1),))   # every edge partitioned
+    pol = RetryPolicy(timeout_s=64.0, base_backoff_s=gap,
+                      backoff_cap_s=64.0, max_attempts=3, jitter=0.0)
+
+    def inject(cosim):
+        cosim.schedule_faults(plan, retry=pol, standby=False)
+
+    def run(engine):
+        return run_scenario(Scenario("edgecase", "", inject),
+                            policy="static", seed=seed, duration_s=8.0,
+                            engine=engine)
+
+    a, b = run("batched"), run("heap")
+    assert a.control_fingerprint() == b.control_fingerprint()
+    assert np.array_equal(a.log.t, b.log.t)
+    assert np.array_equal(a.log.latency_ms, b.log.latency_ms)

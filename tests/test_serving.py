@@ -351,3 +351,47 @@ def test_batched_arrivals_full_batch_and_conservation():
     for t, devs in batches:
         assert t >= ev[k + len(devs) - 1].t - 1e-12
         k += len(devs)
+
+
+def test_replica_pool_health_and_failover():
+    """Down tiers re-route up the hierarchy (device->edge->cloud),
+    degraded tiers still serve, a fully-down chain raises, and
+    mark_down drains a built engine's in-flight rows leak-free."""
+    from repro.serving import FAILOVER_ORDER, PagedServeEngine
+    from repro.serving.replica import DEFAULT_TIERS
+
+    pool = ReplicaPool(DEFAULT_TIERS)
+    assert [pool.health(t) for t in pool.tiers] == ["healthy"] * 3
+    assert pool.resolve_tier("edge") == "edge"
+    pool.set_health("edge", "degraded")        # degraded still serves
+    assert pool.resolve_tier("edge") == "edge"
+    pool.set_health("edge", "down")
+    assert pool.resolve_tier("edge") == "cloud"
+    assert pool.resolve_tier("device") == "device"
+    pool.set_health("device", "down")
+    assert pool.resolve_tier("device") == "cloud"
+    pool.set_health("cloud", "down")
+    with pytest.raises(RuntimeError, match="failover chain"):
+        pool.resolve_tier("device")
+    pool.mark_up("edge")
+    assert pool.resolve_tier("device") == "edge"
+    assert pool.failovers == 3
+    with pytest.raises(ValueError):
+        pool.set_health("edge", "on-fire")
+    assert FAILOVER_ORDER["cloud"] == ()
+
+    # crash with traffic in flight: engine drained, pages conserved
+    lm = ReplicaPool(
+        [TierSpec("edge", arch="stablelm-1.6b", batch_size=2, max_len=64,
+                  paged=True, page_size=8)],
+        shared_params=None)
+    lm.specs["edge"] = dataclasses.replace(lm.specs["edge"], reduced=True)
+    eng = lm.engine("edge")
+    assert isinstance(eng, PagedServeEngine)
+    slot = eng.acquire_slot()
+    eng.admit(np.arange(10) % 50, slot=slot, reserve_tokens=4)
+    assert eng.active_slots == 1
+    drained = lm.mark_down("edge")
+    assert drained == [slot] and eng.active_slots == 0
+    assert eng.pool.free_pages == eng.num_pages
+    assert lm.health("edge") == "down"
